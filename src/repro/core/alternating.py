@@ -1,0 +1,117 @@
+"""Algorithm 2: alternating optimisation of (7).
+
+repeat:
+    P^{n+1}  <- Dinkelbach(problem, a^n)          (Algorithm 1, batched)
+    if objective (9a) bounded by H (eq. 10):      (feasibility gate, line 4)
+        a^{n+1} <- closed form (13)
+until |obj^{n+1} - obj^n| < eps
+
+The objective is monotone non-decreasing and bounded by sum(w) = 1, so the
+loop converges to a local optimum (paper, Sec. IV-B).  Elements whose
+energy gate fails keep their previous a (the paper "breaks"; per-element
+freezing is the batched equivalent and can only do better).
+
+Two implementations:
+  * ``solve_joint``       — jit-friendly ``lax.while_loop`` fleet solve.
+  * ``solve_joint_trace`` — python loop that records the objective path
+                            (used by the convergence benchmark/tests).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.power import PowerSolution, analytic_power, dinkelbach_power, energy_bound_ok
+from repro.core.problem import WirelessFLProblem
+from repro.core.selection import optimal_selection
+
+
+class JointSolution(NamedTuple):
+    a: jax.Array           # selection probabilities a*_ik
+    power: jax.Array       # transmit powers P*_ik
+    objective: jax.Array   # scalar, sum_i w_i a_i (per round)
+    n_iters: jax.Array     # outer iterations used
+    converged: jax.Array   # bool
+
+
+def _init_state(problem: WirelessFLProblem, shape) -> tuple[jax.Array, jax.Array]:
+    """Feasible (a^0, P^0): transmit at P^max, then a^0 from (13)."""
+    p0 = jnp.full(shape, problem.p_max)
+    a0 = optimal_selection(problem, p0)
+    return a0, p0
+
+
+def _solution_shape(problem: WirelessFLProblem, per_round: bool):
+    n = problem.n_devices
+    if per_round and (problem.fading is not None):
+        return (n, problem.n_rounds)
+    return (n,)
+
+
+def solve_joint(problem: WirelessFLProblem,
+                *,
+                eps: float = 1e-7,
+                max_iters: int = 50,
+                power_solver: str = "dinkelbach",
+                faithful_eq13_typo: bool = False,
+                per_round: bool = True) -> JointSolution:
+    """Run Algorithm 2 to convergence for the whole fleet (jit-compatible)."""
+    shape = _solution_shape(problem, per_round)
+    a0, p0 = _init_state(problem, shape)
+    solver: Callable[..., PowerSolution] = (
+        analytic_power if power_solver == "analytic" else dinkelbach_power)
+
+    def step(a):
+        sol = solver(problem, a) if power_solver == "analytic" else solver(problem, a)
+        ok = energy_bound_ok(problem, a, sol) & sol.feasible
+        a_new = optimal_selection(problem, sol.power,
+                                  faithful_eq13_typo=faithful_eq13_typo)
+        # freeze elements whose power subproblem is infeasible / unbounded
+        a_new = jnp.where(ok, a_new, a)
+        return a_new, sol.power
+
+    def cond(state):
+        _, _, obj, obj_prev, it = state
+        return (jnp.abs(obj - obj_prev) >= eps) & (it < max_iters)
+
+    def body(state):
+        a, p, obj, _, it = state
+        a_new, p_new = step(a)
+        return a_new, p_new, problem.objective(a_new), obj, it + 1
+
+    a1, p1 = step(a0)
+    state = (a1, p1, problem.objective(a1), problem.objective(a0), jnp.int32(1))
+    a, p, obj, obj_prev, iters = jax.lax.while_loop(cond, body, state)
+    return JointSolution(a=a, power=p, objective=obj, n_iters=iters,
+                         converged=jnp.abs(obj - obj_prev) < eps)
+
+
+def solve_joint_trace(problem: WirelessFLProblem,
+                      *,
+                      eps: float = 1e-7,
+                      max_iters: int = 50,
+                      power_solver: str = "dinkelbach",
+                      faithful_eq13_typo: bool = False) -> tuple[JointSolution, list[float]]:
+    """Python-loop variant of Algorithm 2 recording the objective trace."""
+    shape = _solution_shape(problem, per_round=True)
+    a, p = _init_state(problem, shape)
+    solver = analytic_power if power_solver == "analytic" else dinkelbach_power
+    trace = [float(problem.objective(a))]
+    converged = False
+    it = 0
+    for it in range(1, max_iters + 1):
+        sol = solver(problem, a)
+        ok = energy_bound_ok(problem, a, sol) & sol.feasible
+        a_new = optimal_selection(problem, sol.power,
+                                  faithful_eq13_typo=faithful_eq13_typo)
+        a = jnp.where(ok, a_new, a)
+        p = sol.power
+        trace.append(float(problem.objective(a)))
+        if abs(trace[-1] - trace[-2]) < eps:
+            converged = True
+            break
+    res = JointSolution(a=a, power=p, objective=jnp.asarray(trace[-1]),
+                        n_iters=jnp.int32(it), converged=jnp.asarray(converged))
+    return res, trace

@@ -1,0 +1,64 @@
+"""Beyond-paper: the *global* optimum of problem (7) by monotone bisection.
+
+Problem (7) is separable per (i, k).  For one element, a is feasible iff
+there exists P in [P^min(a), P^max] with a (P T(P) + E^c) <= E^max and
+a T(P) <= tau.  The energy-minimising feasible power is P = P^min(a)
+(the fractional objective is increasing in P, see power.py), for which
+T = tau / a exactly, so feasibility of a reduces to
+
+    F(a):   P^min(a) <= P^max     and     tau * P^min(a) + a E^c <= E^max.
+
+Both terms are strictly increasing in a (P^min is exp-increasing), so the
+feasible set is an interval [0, a*] and bisection finds the global optimum
+a* exactly.  This dominates the paper's Algorithm 2 (which is a local
+heuristic whose answer depends on its initialisation); EXPERIMENTS.md
+§Repro quantifies the gap.
+
+``solve_joint_optimal`` returns the same JointSolution structure so the
+FL runtime can swap solvers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alternating import JointSolution, _solution_shape
+from repro.core.problem import WirelessFLProblem
+
+
+def _feasible(problem: WirelessFLProblem, a: jax.Array) -> jax.Array:
+    """F(a) above, elementwise; a=0 is always feasible."""
+    p_min = jnp.clip(problem.p_min(a), 0.0, None)
+    ec = problem.compute_energy()
+    emax = problem.energy_budget_j
+    if a.ndim > 1:
+        ec, emax = ec[:, None], emax[:, None]
+    power_ok = p_min <= problem.p_max * (1 + 1e-9)
+    energy_ok = problem.tau_th * p_min + a * ec <= emax * (1 + 1e-9)
+    return (power_ok & energy_ok) | (a <= 0)
+
+
+def solve_joint_optimal(problem: WirelessFLProblem,
+                        *,
+                        n_bisect: int = 60,
+                        per_round: bool = True) -> JointSolution:
+    """Exact per-element optimum of (7) via bisection on a (jit-friendly)."""
+    shape = _solution_shape(problem, per_round)
+
+    lo = jnp.zeros(shape)
+    hi = jnp.ones(shape)
+    # if a=1 feasible, take it outright
+    feas1 = _feasible(problem, hi)
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        ok = _feasible(problem, mid)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_bisect, body, (lo, hi))
+    a = jnp.where(feas1, 1.0, lo)
+    power = jnp.clip(problem.p_min(a), 0.0, problem.p_max)
+    return JointSolution(a=a, power=power, objective=problem.objective(a),
+                         n_iters=jnp.int32(n_bisect),
+                         converged=jnp.asarray(True))

@@ -1,0 +1,191 @@
+"""Problem specification for joint probabilistic selection + power allocation.
+
+Implements the system model of Section II of the paper:
+
+* OFDMA uplink rate  r_ik(P) = B_i log2(1 + P g_ik / (d_i^2 sigma^2))   (g=1 paper)
+* transmission time  T_ik(P) = S / r_ik(P)                               (eq. 1)
+* computation energy E^c_i   = kappa * C_i * |D_i| * gamma_i^2           (eq. 5)
+* upload energy      E^u_ik  = P_ik * T_ik(P_ik)
+
+All per-device quantities are jnp arrays of shape ``[N]`` (or ``[N, K]``
+when per-round fading is enabled — a beyond-paper generalisation the
+closed forms support unchanged because the problem is separable per
+``(i, k)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LN2 = float(np.log(2.0))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WirelessFLProblem:
+    """Static description of the joint selection/power problem (7).
+
+    Array fields are leaves (shape ``[N]`` unless noted); python floats are
+    static metadata. ``K`` rounds share the same constraint data in the
+    paper (channel is static), so solutions are round-independent unless
+    ``fading`` (shape ``[N, K]``) is provided.
+    """
+
+    # --- per-device wireless/compute state ------------------------------
+    distance_m: jax.Array          # d_i, metres to the server
+    bandwidth_hz: jax.Array        # B_i
+    energy_budget_j: jax.Array     # E_i^max, per-round energy budget
+    dataset_size: jax.Array        # |D_i| (float for weighting math)
+    cycles_per_sample: jax.Array   # C_i
+    cpu_hz: jax.Array              # gamma_i
+    weights: jax.Array             # w_i, objective weights (sum to 1)
+    fading: Optional[jax.Array] = None   # g_ik in (0, inf), [N, K]; None => 1
+
+    # --- shared constants (static) ---------------------------------------
+    grad_size_bits: float = dataclasses.field(default=199_210 * 32.0, metadata=dict(static=True))
+    noise_power: float = dataclasses.field(default=1e-12, metadata=dict(static=True))       # sigma^2
+    p_max: float = dataclasses.field(default=1.0, metadata=dict(static=True))               # P^max (W)
+    tau_th: float = dataclasses.field(default=0.08, metadata=dict(static=True))             # tau^th (s)
+    kappa: float = dataclasses.field(default=1e-28, metadata=dict(static=True))             # switched capacitance
+    n_rounds: int = dataclasses.field(default=1, metadata=dict(static=True))                # K
+
+    # ---------------------------------------------------------------- api
+    @property
+    def n_devices(self) -> int:
+        return int(self.distance_m.shape[0])
+
+    def path_gain(self) -> jax.Array:
+        """g_ik / (d_i^2 sigma^2) — the SNR per transmitted watt, [N] or [N,K]."""
+        g = 1.0 if self.fading is None else self.fading
+        d2s = jnp.square(self.distance_m) * self.noise_power
+        base = 1.0 / d2s
+        if self.fading is None:
+            return base
+        return g * base[:, None]
+
+    def _pg(self, like: jax.Array) -> jax.Array:
+        """path_gain broadcast to the rank of ``like`` ([N] or [N, K])."""
+        pg = self.path_gain()
+        if like.ndim > pg.ndim:
+            pg = pg[:, None]
+        return pg
+
+    def rate(self, power: jax.Array) -> jax.Array:
+        """Achievable uplink rate r_ik(P) in bits/s (paper, Sec II-A)."""
+        snr = power * self._pg(power)
+        bw = self.bandwidth_hz if power.ndim == 1 else self.bandwidth_hz[:, None]
+        return bw * jnp.log2(1.0 + snr)
+
+    def tx_time(self, power: jax.Array) -> jax.Array:
+        """Transmission time T_ik(P) = S / r_ik(P)  (eq. 1)."""
+        return self.grad_size_bits / jnp.maximum(self.rate(power), 1e-30)
+
+    def compute_energy(self) -> jax.Array:
+        """E^c_i = kappa C_i |D_i| gamma_i^2  (eq. 5)."""
+        return self.kappa * self.cycles_per_sample * self.dataset_size * jnp.square(self.cpu_hz)
+
+    def upload_energy(self, power: jax.Array) -> jax.Array:
+        """E^u_ik = P T_ik(P)."""
+        return power * self.tx_time(power)
+
+    def round_energy(self, power: jax.Array) -> jax.Array:
+        """E_ik = E^c_i + E^u_ik  (eq. 6)."""
+        ec = self.compute_energy()
+        if power.ndim > 1:
+            ec = ec[:, None]
+        return ec + self.upload_energy(power)
+
+    def p_min(self, a: jax.Array) -> jax.Array:
+        """Minimum power meeting the time constraint (7c) at probability a.
+
+        P^min_ik = (2^{a S / (B_i tau)} - 1) / path_gain  — below this the
+        expected transmission time a*T exceeds tau^th.
+        """
+        bw = self.bandwidth_hz if a.ndim == 1 else self.bandwidth_hz[:, None]
+        exponent = a * self.grad_size_bits / (bw * self.tau_th)
+        # exp2 overflows fast; clamp exponent so infeasible entries give a
+        # huge-but-finite P^min (> p_max), which downstream logic treats as
+        # "infeasible at this a" rather than producing NaNs.
+        exponent = jnp.minimum(exponent, 120.0)
+        return jnp.expm1(exponent * LN2) / self._pg(a)
+
+    def objective(self, a: jax.Array) -> jax.Array:
+        """Weighted sum of selection probabilities (7a) for one round."""
+        w = self.weights if a.ndim == 1 else self.weights[:, None]
+        return jnp.sum(a * w)
+
+    def constraints_satisfied(self, a: jax.Array, power: jax.Array,
+                              rtol: float = 1e-4) -> jax.Array:
+        """Boolean feasibility of (7b)-(7e) per element (with tolerance)."""
+        t = self.tx_time(power)
+        energy_ok = a * (power * t + _bcast(self.compute_energy(), a)) \
+            <= _bcast(self.energy_budget_j, a) * (1 + rtol) + 1e-12
+        time_ok = a * t <= self.tau_th * (1 + rtol)
+        p_ok = (power >= -1e-12) & (power <= self.p_max * (1 + rtol))
+        a_ok = (a >= -1e-12) & (a <= 1 + rtol)
+        return energy_ok & time_ok & p_ok & a_ok
+
+
+def _bcast(x: jax.Array, like: jax.Array) -> jax.Array:
+    return x if like.ndim == 1 else x[:, None]
+
+
+def sample_problem(rng: np.random.Generator | int,
+                   n_devices: int = 100,
+                   *,
+                   area_m: float = 1000.0,
+                   total_bandwidth_hz: float = 10e6,
+                   tau_th: float = 0.08,
+                   p_max: float = 1.0,
+                   grad_size_bits: float = 199_210 * 32.0,
+                   n_rounds: int = 1,
+                   energy_budget_range: tuple[float, float] = (1e-3, 100.0),
+                   dataset_total: int = 60_000,
+                   dirichlet_sizes: Optional[np.ndarray] = None,
+                   with_fading: bool = False) -> WirelessFLProblem:
+    """Draw a random scenario matching the paper's simulation setup (Sec V-A).
+
+    100 devices uniform in 1 km^2, server at the centre, B = 10 MHz shared
+    equally, sigma^2 = 1e-12, per-round energy budgets log-uniform in
+    [1e-3, 100] J.
+    """
+    rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
+    xy = rng.uniform(0.0, area_m, size=(n_devices, 2))
+    centre = np.array([area_m / 2, area_m / 2])
+    d = np.maximum(np.linalg.norm(xy - centre, axis=1), 1.0)
+
+    if dirichlet_sizes is not None:
+        sizes = np.asarray(dirichlet_sizes, dtype=np.float64)
+    else:
+        props = rng.dirichlet(np.full(n_devices, 2.0))
+        sizes = np.maximum(np.round(props * dataset_total), 10.0)
+
+    lo, hi = energy_budget_range
+    budgets = np.exp(rng.uniform(np.log(lo), np.log(hi), size=n_devices))
+
+    fading = None
+    if with_fading:
+        # Rayleigh block fading per round (beyond-paper option).
+        fading = rng.exponential(1.0, size=(n_devices, n_rounds))
+
+    return WirelessFLProblem(
+        distance_m=jnp.asarray(d, jnp.float32),
+        bandwidth_hz=jnp.full((n_devices,), total_bandwidth_hz / n_devices, jnp.float32),
+        energy_budget_j=jnp.asarray(budgets, jnp.float32),
+        dataset_size=jnp.asarray(sizes, jnp.float32),
+        cycles_per_sample=jnp.asarray(rng.uniform(1e4, 5e4, n_devices), jnp.float32),
+        cpu_hz=jnp.asarray(rng.uniform(0.5e9, 2e9, n_devices), jnp.float32),
+        weights=jnp.asarray(sizes / sizes.sum(), jnp.float32),
+        fading=None if fading is None else jnp.asarray(fading, jnp.float32),
+        grad_size_bits=float(grad_size_bits),
+        noise_power=1e-12,
+        p_max=float(p_max),
+        tau_th=float(tau_th),
+        kappa=1e-28,
+        n_rounds=int(n_rounds),
+    )

@@ -1,0 +1,179 @@
+"""Client-selection strategies: the paper's approach + its three benchmarks.
+
+Every scheduler exposes:
+
+    state = scheduler.precompute(problem)          # one-off solve
+    draw  = scheduler.sample(state, key, k)        # per-round participation
+
+returning a ``ParticipationDraw`` with the Bernoulli participation mask,
+per-client transmit powers, and the aggregation weights alpha_i used by the
+server update (eq. 4).  Schedulers differ in:
+
+* **probabilistic** (ours, Alg. 2/3): a* from the joint solve; participate
+  w.p. a*_ik at power P*_ik; alpha proportional to |D_i|.
+* **deterministic**: the rounded (a* >= 0.5) binary version (paper Sec. V).
+* **uniform** [McMahan et al.]: M clients uniformly at random, transmit at
+  P^max; ignores the wireless/energy constraints.
+* **equally_weighted** [Nishio & Yonetani]: binary selection, equal
+  objective weights and equal aggregation weights.
+
+All schedulers are pure-JAX and jit/vmap friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alternating import JointSolution, solve_joint
+from repro.core.optimal import solve_joint_optimal
+from repro.core.problem import WirelessFLProblem
+
+
+class ParticipationDraw(NamedTuple):
+    mask: jax.Array         # [N] bool — who transmits this round
+    power: jax.Array        # [N] transmit power for participants
+    agg_weights: jax.Array  # [N] alpha_i for the server update (eq. 4)
+    probs: jax.Array        # [N] the selection probabilities used
+
+
+class SchedulerState(NamedTuple):
+    a: jax.Array            # [N] or [N, K]
+    power: jax.Array
+    agg_weights: jax.Array  # [N]
+
+
+def _round_slice(x: jax.Array, k) -> jax.Array:
+    return x if x.ndim == 1 else x[:, k]
+
+
+def _data_weights(problem: WirelessFLProblem) -> jax.Array:
+    return problem.dataset_size / jnp.sum(problem.dataset_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbabilisticScheduler:
+    """The paper's joint probabilistic selection + power allocation."""
+
+    solver: str = "alternating"        # "alternating" (paper) | "optimal" (ours)
+    power_solver: str = "dinkelbach"   # "dinkelbach" (paper) | "analytic" (fast path)
+    unbiased_aggregation: bool = False  # beyond-paper alpha_i / a_i correction
+    faithful_eq13_typo: bool = False
+
+    def solve(self, problem: WirelessFLProblem) -> JointSolution:
+        if self.solver == "optimal":
+            return solve_joint_optimal(problem)
+        return solve_joint(problem, power_solver=self.power_solver,
+                           faithful_eq13_typo=self.faithful_eq13_typo)
+
+    def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
+        sol = self.solve(problem)
+        return SchedulerState(a=sol.a, power=sol.power,
+                              agg_weights=_data_weights(problem))
+
+    def sample(self, state: SchedulerState, key: jax.Array, k: int = 0) -> ParticipationDraw:
+        a = _round_slice(state.a, k)
+        p = _round_slice(state.power, k)
+        mask = jax.random.bernoulli(key, a)
+        alpha = state.agg_weights
+        if self.unbiased_aggregation:
+            alpha = alpha / jnp.maximum(a, 1e-6)
+        return ParticipationDraw(mask=mask, power=p, agg_weights=alpha, probs=a)
+
+    def expected_participants(self, state: SchedulerState) -> jax.Array:
+        a = state.a if state.a.ndim == 1 else state.a.mean(axis=1)
+        return jnp.sum(a)
+
+
+def _round_preserving_count(a: jax.Array) -> jax.Array:
+    """Binarise probabilities keeping the expected participant count.
+
+    The paper rounds a* "up or down" but also states the expected number of
+    selected devices matches the probabilistic version — i.e. the
+    ceil(sum a) highest-probability devices are selected (a plain 0.5
+    threshold would select nobody here, since per-element a* rarely exceeds
+    ~0.3 under the paper's wireless constants). See DESIGN.md §1.
+    """
+    flat = a if a.ndim == 1 else a[:, 0]
+    k = jnp.clip(jnp.round(jnp.sum(flat)), 1, flat.shape[0]).astype(jnp.int32)
+    order = jnp.argsort(-flat)
+    ranks = jnp.argsort(order)
+    sel = (ranks < k).astype(a.dtype)
+    return sel if a.ndim == 1 else jnp.broadcast_to(sel[:, None], a.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicScheduler:
+    """Rounded binary version of the probabilistic solution (paper Sec. V),
+    expected-count preserving."""
+
+    inner: ProbabilisticScheduler = ProbabilisticScheduler()
+
+    def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
+        sol = self.inner.solve(problem)
+        a_bin = _round_preserving_count(sol.a)
+        return SchedulerState(a=a_bin, power=sol.power,
+                              agg_weights=_data_weights(problem))
+
+    def sample(self, state: SchedulerState, key: jax.Array, k: int = 0) -> ParticipationDraw:
+        a = _round_slice(state.a, k)
+        return ParticipationDraw(mask=a > 0, power=_round_slice(state.power, k),
+                                 agg_weights=state.agg_weights, probs=a)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformScheduler:
+    """M clients uniformly at random at P^max; constraint-oblivious [1]."""
+
+    m: int = 10
+
+    def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
+        n = problem.n_devices
+        a = jnp.full((n,), self.m / n)
+        p = jnp.full((n,), problem.p_max)
+        return SchedulerState(a=a, power=p, agg_weights=_data_weights(problem))
+
+    def sample(self, state: SchedulerState, key: jax.Array, k: int = 0) -> ParticipationDraw:
+        n = state.a.shape[0]
+        perm = jax.random.permutation(key, n)
+        mask = jnp.zeros((n,), bool).at[perm[: self.m]].set(True)
+        return ParticipationDraw(mask=mask, power=state.power,
+                                 agg_weights=state.agg_weights, probs=state.a)
+
+
+@dataclasses.dataclass(frozen=True)
+class EquallyWeightedScheduler:
+    """Binary selection with equal device weights, per [6] (Nishio &
+    Yonetani): maximise the *count* of participants under the constraints;
+    aggregation also equally weighted."""
+
+    inner: ProbabilisticScheduler = ProbabilisticScheduler()
+
+    def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
+        equal = dataclasses.replace(
+            problem, weights=jnp.full_like(problem.weights,
+                                           1.0 / problem.n_devices))
+        sol = self.inner.solve(equal)
+        a_bin = _round_preserving_count(sol.a)
+        n_sel = jnp.maximum(jnp.sum(a_bin if a_bin.ndim == 1 else a_bin[:, 0]), 1.0)
+        alpha = jnp.full_like(problem.weights, 1.0) / n_sel
+        return SchedulerState(a=a_bin, power=sol.power, agg_weights=alpha)
+
+    def sample(self, state: SchedulerState, key: jax.Array, k: int = 0) -> ParticipationDraw:
+        a = _round_slice(state.a, k)
+        return ParticipationDraw(mask=a > 0, power=_round_slice(state.power, k),
+                                 agg_weights=state.agg_weights, probs=a)
+
+
+SCHEDULERS = {
+    "probabilistic": ProbabilisticScheduler,
+    "deterministic": DeterministicScheduler,
+    "uniform": UniformScheduler,
+    "equally_weighted": EquallyWeightedScheduler,
+}
+
+
+def make_scheduler(name: str, **kwargs):
+    return SCHEDULERS[name](**kwargs)

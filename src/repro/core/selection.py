@@ -1,0 +1,42 @@
+"""Closed-form selection probabilities (eq. 13) given fixed powers.
+
+With P fixed, problem (12) separates per (i, k) into a linear program in a
+with box constraints, whose optimum saturates the tightest constraint:
+
+    a*_ik = min( 1,
+                 tau^th / T_ik(P_ik),                 # time constraint (7c)
+                 E^max_i / (P_ik T_ik(P_ik) + E^c_i)  # energy constraint (7b)
+               )
+
+NOTE (paper erratum, DESIGN.md §1): the paper prints the middle term as
+``tau^th / (S * T_ik)``; the extra S is dimensionally inconsistent with
+(7c) and would violate the paper's own constraint.  The corrected form is
+the default; ``faithful_eq13_typo=True`` reproduces the verbatim formula.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import WirelessFLProblem
+
+
+def optimal_selection(problem: WirelessFLProblem,
+                      power: jax.Array,
+                      *,
+                      faithful_eq13_typo: bool = False) -> jax.Array:
+    """a*_ik per eq. (13). ``power`` has shape [N] or [N, K]."""
+    t = problem.tx_time(power)
+    ec = problem.compute_energy()
+    emax = problem.energy_budget_j
+    if power.ndim > 1:
+        ec, emax = ec[:, None], emax[:, None]
+
+    time_term = problem.tau_th / jnp.maximum(t, 1e-30)
+    if faithful_eq13_typo:
+        time_term = time_term / problem.grad_size_bits
+    energy_term = emax / jnp.maximum(power * t + ec, 1e-30)
+    a = jnp.minimum(jnp.minimum(1.0, time_term), energy_term)
+    # P = 0 (e.g. a collapsed to 0 earlier) transmits nothing: T = inf.
+    a = jnp.where(power > 0, a, 0.0)
+    return jnp.clip(a, 0.0, 1.0)

@@ -1,0 +1,239 @@
+"""Federated learning round engine — Algorithm 3 of the paper.
+
+One communication round k:
+  1. server broadcasts theta^k (free: downlink neglected, Sec. II-C),
+  2. the scheduler samples the participation mask m ~ Bernoulli(a*_k)
+     and supplies transmit powers P*_k,
+  3. every participating client computes its local stochastic gradient,
+  4. server updates  theta^{k+1} = theta^k - eta * sum_i alpha_i m_i g_i
+     (eq. 4),
+  5. wall-clock advances by the straggler's transmission time
+     max_{i in S} T_ik and energy by sum_{i in S} (E^c_i + P_ik T_ik).
+
+Two mathematically identical aggregation paths are provided:
+
+* ``fused``   — alpha_i m_i enters as per-example loss weights, so a single
+  backward pass over the concatenated cohort batch computes the aggregated
+  gradient directly.  This is the formulation that scales to the big
+  architectures (the mask rides the data-parallel axis; see train_step in
+  launch/).
+* ``stacked`` — per-client gradients via vmap, then an explicit
+  mask-weighted reduction (the ``masked_aggregate`` Pallas kernel's host
+  path).  Used to cross-check and to exercise the kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import WirelessFLProblem
+from repro.core.schedulers import ParticipationDraw
+from repro.data.synthetic import Dataset
+from repro.models import cnn
+from repro.optim.optimizers import Optimizer, sgd
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_rounds: int = 300
+    batch_per_client: int = 16
+    lr: float = 0.05
+    eval_every: int = 10
+    aggregate: str = "fused"            # "fused" | "stacked"
+    include_compute_time: bool = False  # paper: round time = straggler tx time
+    # eq. (4) verbatim keeps fixed alpha_i, so the update magnitude scales
+    # with the (tiny) expected participation mass sum_i alpha_i a_i ~ 0.02.
+    # renormalize=True divides by sum_i alpha_i m_i (standard FedAvg
+    # weighting) which only rescales the step; the paper's selection
+    # dynamics are unchanged.  Faithful mode: renormalize=False.
+    renormalize: bool = True
+    # Beyond-paper: quantise each client's uplink gradient to this many
+    # bits (stochastic rounding, per-tensor max scaling) before server
+    # aggregation — models the compressed payload whose smaller S raises
+    # the feasible selection probabilities (EXPERIMENTS.md §Perf/It-3).
+    # None = fp32 uplink (paper).  Requires aggregate="stacked".
+    uplink_bits: Optional[int] = None
+    seed: int = 0
+
+
+class FLHistory(NamedTuple):
+    rounds: np.ndarray
+    sim_time: np.ndarray        # cumulative simulated seconds
+    energy: np.ndarray          # cumulative Joules
+    participants: np.ndarray    # per-round participant count
+    eval_rounds: np.ndarray
+    eval_time: np.ndarray
+    eval_acc: np.ndarray
+
+    def time_to_accuracy(self, target: float) -> float:
+        hit = np.where(self.eval_acc >= target)[0]
+        return float(self.eval_time[hit[0]]) if len(hit) else float("nan")
+
+    def energy_to_accuracy(self, target: float) -> float:
+        hit = np.where(self.eval_acc >= target)[0]
+        if not len(hit):
+            return float("nan")
+        r = self.eval_rounds[hit[0]]
+        return float(self.energy[np.searchsorted(self.rounds, r)])
+
+
+class FLResult(NamedTuple):
+    params: Any
+    history: FLHistory
+
+
+# --------------------------------------------------------------------- steps
+
+def _make_fused_step(lr: float):
+    @jax.jit
+    def step(params, images, labels, sample_weights):
+        grads = jax.grad(cnn.loss_fn)(params, images, labels, sample_weights)
+        return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return step
+
+
+def quantize_stochastic(g: jax.Array, key: jax.Array, bits: int) -> jax.Array:
+    """Per-tensor max-scaled b-bit stochastic-rounding quantiser (uplink
+    payload model: b bits/param instead of 32)."""
+    levels = 2.0 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / levels
+    scaled = g / scale
+    low = jnp.floor(scaled)
+    p_up = scaled - low
+    q = low + (jax.random.uniform(key, g.shape) < p_up)
+    return jnp.clip(q, -levels, levels) * scale
+
+
+def _quantize_tree(gstack, key: jax.Array, bits: int):
+    leaves, treedef = jax.tree_util.tree_flatten(gstack)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        n = leaf.shape[0]
+        qs = jax.vmap(lambda g, kk: quantize_stochastic(g, kk, bits))(
+            leaf, jax.random.split(k, n))
+        out.append(qs)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _make_stacked_step(lr: float, aggregate_fn: Callable | None = None,
+                       uplink_bits: Optional[int] = None):
+    if aggregate_fn is None:
+        def aggregate_fn(gstack, coef):   # [N, ...] x [N] -> [...]
+            return jax.tree_util.tree_map(
+                lambda g: jnp.tensordot(coef, g, axes=((0,), (0,))), gstack)
+
+    @jax.jit
+    def step(params, images, labels, coef, key):
+        # images [N, b, ...] -> per-client mean-loss gradients
+        def client_grad(img, lab):
+            return jax.grad(cnn.loss_fn)(params, img, lab)
+        gstack = jax.vmap(client_grad)(images, labels)
+        if uplink_bits is not None:
+            gstack = _quantize_tree(gstack, key, uplink_bits)
+        agg = aggregate_fn(gstack, coef)
+        return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, agg)
+    return step
+
+
+# -------------------------------------------------------------------- engine
+
+def run_fl(problem: WirelessFLProblem,
+           scheduler,
+           train: Dataset,
+           parts: Sequence[np.ndarray],
+           test: Dataset,
+           config: FLConfig,
+           aggregate_fn: Callable | None = None,
+           init_params: Any | None = None) -> FLResult:
+    """Simulate Algorithm 3 with exact paper time/energy accounting."""
+    n = problem.n_devices
+    assert len(parts) == n
+    rng = np.random.default_rng(config.seed)
+    key = jax.random.PRNGKey(config.seed)
+
+    params = cnn.init(jax.random.PRNGKey(config.seed + 17)) if init_params is None else init_params
+    state = scheduler.precompute(problem)
+    ec = np.asarray(problem.compute_energy())
+
+    fused = config.aggregate == "fused"
+    if config.uplink_bits is not None and fused:
+        raise ValueError("uplink_bits requires aggregate='stacked' "
+                         "(per-client gradients must exist to quantise)")
+    step = (_make_fused_step(config.lr) if fused
+            else _make_stacked_step(config.lr, aggregate_fn,
+                                    config.uplink_bits))
+
+    b = config.batch_per_client
+    hist_rounds, hist_time, hist_energy, hist_parts = [], [], [], []
+    eval_rounds, eval_time, eval_acc = [], [], []
+    cum_time = 0.0
+    cum_energy = 0.0
+
+    for k in range(config.n_rounds):
+        key, sub = jax.random.split(key)
+        draw: ParticipationDraw = scheduler.sample(state, sub, k)
+        mask = np.asarray(draw.mask)
+        power = np.asarray(draw.power)
+        alpha = np.asarray(draw.agg_weights)
+
+        # ---- accounting (paper Sec. V-B) --------------------------------
+        if mask.any():
+            t_all = np.asarray(problem.tx_time(jnp.asarray(power)))
+            if power.ndim > 1:
+                t_all = t_all[:, k]
+            sel_t = t_all[mask]
+            round_time = float(np.max(sel_t))
+            if config.include_compute_time:
+                comp = np.asarray(problem.cycles_per_sample * problem.dataset_size
+                                  / problem.cpu_hz)
+                round_time = float(np.max(sel_t + comp[mask]))
+            round_energy = float(np.sum(power[mask] * sel_t + ec[mask]))
+        else:
+            round_time, round_energy = 0.0, 0.0
+
+        cum_time += round_time
+        cum_energy += round_energy
+        hist_rounds.append(k)
+        hist_time.append(cum_time)
+        hist_energy.append(cum_energy)
+        hist_parts.append(int(mask.sum()))
+
+        # ---- learning step (eq. 4) --------------------------------------
+        if mask.any():
+            batch_idx = np.stack([
+                rng.choice(parts[i], size=b, replace=len(parts[i]) < b)
+                for i in range(n)])
+            images = jnp.asarray(train.images[batch_idx])   # [N, b, 28, 28, 1]
+            labels = jnp.asarray(train.labels[batch_idx])
+            coef = jnp.asarray(alpha * mask, jnp.float32)
+            if config.renormalize:
+                coef = coef / jnp.maximum(coef.sum(), 1e-12)
+            if fused:
+                sw = (jnp.repeat(coef, b) / b).astype(jnp.float32)
+                params = step(params, images.reshape(n * b, 28, 28, 1),
+                              labels.reshape(n * b), sw)
+            else:
+                # fold_in (not split): keeps the scheduler key stream
+                # identical across aggregation modes
+                qkey = jax.random.fold_in(sub, 1)
+                params = step(params, images, labels, coef, qkey)
+
+        if (k + 1) % config.eval_every == 0 or k == config.n_rounds - 1:
+            acc = cnn.accuracy(params, jnp.asarray(test.images),
+                               jnp.asarray(test.labels))
+            eval_rounds.append(k)
+            eval_time.append(cum_time)
+            eval_acc.append(acc)
+
+    history = FLHistory(
+        rounds=np.asarray(hist_rounds), sim_time=np.asarray(hist_time),
+        energy=np.asarray(hist_energy), participants=np.asarray(hist_parts),
+        eval_rounds=np.asarray(eval_rounds), eval_time=np.asarray(eval_time),
+        eval_acc=np.asarray(eval_acc))
+    return FLResult(params=params, history=history)

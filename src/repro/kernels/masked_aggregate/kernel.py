@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: mask-weighted gradient aggregation (server eq. 4).
+
+Computes  out[d] = sum_i coef_i * g[i, d]  over a stack of client updates
+g [N, D] with coef = alpha_i * m_i (participation mask x aggregation
+weight).  The stack is streamed HBM -> VMEM in (CLIENT_BLK, LANE_BLK)
+tiles; accumulation is fp32 in the output VMEM tile across the client
+grid dimension (revisited-output accumulation), so each output element is
+written to HBM exactly once per lane tile.
+
+Tiling: LANE_BLK = 512 f32 lanes (MXU/VPU aligned, 4 x 128) and
+CLIENT_BLK = 64 keeps the working set (64*512*4 B = 128 KiB input +
+2 KiB coef + 2 KiB acc) comfortably inside the ~16 MiB v5e VMEM with
+double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CLIENT_BLK = 64
+LANE_BLK = 512
+
+
+def _kernel(g_ref, coef_ref, out_ref):
+    i = pl.program_id(1)          # client-block index (accumulation dim)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)            # [CLIENT_BLK, LANE_BLK]
+    coef = coef_ref[...].astype(jnp.float32)      # [CLIENT_BLK, 1]
+    out_ref[...] += jnp.sum(g * coef, axis=0, keepdims=True)
+
+
+def masked_aggregate_tiled(gstack: jax.Array, coef: jax.Array,
+                           interpret: bool = False) -> jax.Array:
+    """gstack [N, D], coef [N] -> [D] fp32.  N % CLIENT_BLK == 0,
+    D % LANE_BLK == 0 (ops.py pads)."""
+    n, d = gstack.shape
+    assert n % CLIENT_BLK == 0 and d % LANE_BLK == 0, (n, d)
+    grid = (d // LANE_BLK, n // CLIENT_BLK)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((CLIENT_BLK, LANE_BLK), lambda j, i: (i, j)),
+            pl.BlockSpec((CLIENT_BLK, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LANE_BLK), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(gstack, coef[:, None])
+    return out[0]

@@ -1,0 +1,35 @@
+"""Jit'd wrapper: aggregate a pytree of stacked client gradients with a
+coefficient vector — the FL engine's ``aggregate_fn`` plug-in
+(engine.run_fl(aggregate_fn=masked_aggregate_pytree))."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.masked_aggregate.kernel import (
+    CLIENT_BLK, LANE_BLK, masked_aggregate_tiled)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def masked_aggregate(gstack: jax.Array, coef: jax.Array,
+                     interpret: bool = True) -> jax.Array:
+    """gstack [N, ...] -> [...] (leading client axis reduced)."""
+    n = gstack.shape[0]
+    lead_shape = gstack.shape[1:]
+    d = int(np.prod(lead_shape))
+    flat = gstack.reshape(n, d)
+    n_pad = -(-n // CLIENT_BLK) * CLIENT_BLK - n
+    d_pad = -(-d // LANE_BLK) * LANE_BLK - d
+    flat = jnp.pad(flat, ((0, n_pad), (0, d_pad)))
+    coef_p = jnp.pad(coef, (0, n_pad))
+    out = masked_aggregate_tiled(flat, coef_p, interpret=interpret)
+    return out[:d].reshape(lead_shape)
+
+
+def masked_aggregate_pytree(gstack_tree, coef, interpret: bool = True):
+    return jax.tree_util.tree_map(
+        lambda g: masked_aggregate(g, coef, interpret=interpret).astype(g.dtype),
+        gstack_tree)

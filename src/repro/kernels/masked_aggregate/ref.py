@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for masked_aggregate."""
+import jax
+import jax.numpy as jnp
+
+
+def masked_aggregate_ref(gstack: jax.Array, coef: jax.Array) -> jax.Array:
+    """out[d] = sum_i coef_i g[i, d], fp32 accumulation."""
+    return jnp.einsum("nd,n->d", gstack.astype(jnp.float32),
+                      coef.astype(jnp.float32))

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fleet-scale joint selection/power solve.
+
+Solves the per-device global optimum of problem (7) (the monotone
+bisection of core/optimal.py) for a *fleet tile at a time*: device state
+(path gain, bandwidth, budgets, compute energy) is streamed HBM -> VMEM in
+(ROWS, 128) blocks and the fixed-iteration bisection runs entirely on the
+VPU — branch-free elementwise ops, no host loop, no re-materialisation of
+intermediates in HBM.  For planetary-scale FL fleets (10^5-10^7 devices x
+rounds) this is the compute hot-spot of the paper's technique; the pure
+XLA path (ref.py) materialises each bisection iterate in HBM, the kernel
+keeps all 60 iterates VMEM-resident.
+
+Inputs are pre-flattened [M, 128] tiles (ops.py handles padding/reshape):
+    path_gain   g / (d^2 sigma^2)           [M,128] f32
+    bandwidth   B_i                         [M,128] f32
+    e_max       per-round energy budget     [M,128] f32
+    e_comp      E^c_i                       [M,128] f32
+scalars (SMEM): S (bits), tau, p_max.
+Outputs: a* and P* = min-power at a* (clipped), both [M,128] f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LN2 = 0.6931471805599453
+
+DEFAULT_ROWS = 256      # (256, 128) f32 tile = 128 KiB/operand in VMEM
+N_BISECT = 60
+
+
+def _feasible(a, pg, bw, emax, ec, s_bits, tau, p_max):
+    """F(a): P^min(a) <= P^max  and  tau P^min(a) + a E^c <= E^max."""
+    expo = jnp.minimum(a * s_bits / (bw * tau), 120.0)
+    p_min = jnp.expm1(expo * LN2) / pg
+    power_ok = p_min <= p_max
+    energy_ok = tau * p_min + a * ec <= emax
+    return power_ok & energy_ok
+
+
+def _solve_tile(pg, bw, emax, ec, *, s_bits, tau, p_max):
+    ones = jnp.ones_like(pg)
+    feas1 = _feasible(ones, pg, bw, emax, ec, s_bits, tau, p_max)
+    lo = jnp.zeros_like(pg)
+    hi = ones
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = _feasible(mid, pg, bw, emax, ec, s_bits, tau, p_max)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, N_BISECT, body, (lo, hi))
+    a = jnp.where(feas1, 1.0, lo)
+    expo = jnp.minimum(a * s_bits / (bw * tau), 120.0)
+    p = jnp.clip(jnp.expm1(expo * LN2) / pg, 0.0, p_max)
+    return a, p
+
+
+def _kernel(pg_ref, bw_ref, emax_ref, ec_ref, a_ref, p_ref,
+            *, s_bits, tau, p_max):
+    a, p = _solve_tile(pg_ref[...], bw_ref[...], emax_ref[...], ec_ref[...],
+                       s_bits=s_bits, tau=tau, p_max=p_max)
+    a_ref[...] = a
+    p_ref[...] = p
+
+
+def selection_solve_tiled(pg, bw, emax, ec, *, s_bits: float, tau: float,
+                          p_max: float, rows: int = DEFAULT_ROWS,
+                          interpret: bool = False):
+    """pg/bw/emax/ec: [M, 128] f32 with M % rows == 0."""
+    m, lanes = pg.shape
+    assert lanes == 128 and m % rows == 0, (m, lanes, rows)
+    grid = (m // rows,)
+    blk = pl.BlockSpec((rows, 128), lambda i: (i, 0))
+    kernel = functools.partial(_kernel, s_bits=float(s_bits), tau=float(tau),
+                               p_max=float(p_max))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk] * 4,
+        out_specs=[blk, blk],
+        out_shape=[jax.ShapeDtypeStruct((m, 128), jnp.float32)] * 2,
+        interpret=interpret,
+    )(pg, bw, emax, ec)

@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for the selection_solve kernel: takes a
+WirelessFLProblem, returns a JointSolution (drop-in for
+core.optimal.solve_joint_optimal)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alternating import JointSolution
+from repro.core.problem import WirelessFLProblem
+from repro.kernels.selection_solve.kernel import selection_solve_tiled
+
+_TILE = 128 * 256
+
+
+def _pack(x, n_pad):
+    x = jnp.pad(x.astype(jnp.float32).reshape(-1), (0, n_pad),
+                constant_values=1.0)
+    return x.reshape(-1, 128)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def solve_joint_kernel(problem: WirelessFLProblem,
+                       interpret: bool = True) -> JointSolution:
+    pg = problem.path_gain()
+    n = pg.size
+    m128 = -(-n // 128) * 128
+    rows_blk = 256 * 128
+    m_pad = -(-m128 // rows_blk) * rows_blk
+    n_pad = m_pad - n
+
+    args = [_pack(v, n_pad) for v in
+            (pg, problem.bandwidth_hz, problem.energy_budget_j,
+             problem.compute_energy())]
+    a, p = selection_solve_tiled(
+        *args, s_bits=problem.grad_size_bits, tau=problem.tau_th,
+        p_max=problem.p_max, interpret=interpret)
+    a = a.reshape(-1)[:n].reshape(pg.shape)
+    p = p.reshape(-1)[:n].reshape(pg.shape)
+    return JointSolution(a=a, power=p, objective=problem.objective(a),
+                         n_iters=jnp.int32(60), converged=jnp.asarray(True))

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the selection_solve kernel (same math as
+core/optimal.py, restated on the kernel's flattened operands)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selection_solve.kernel import LN2, N_BISECT
+
+
+def _feasible(a, pg, bw, emax, ec, s_bits, tau, p_max):
+    expo = jnp.minimum(a * s_bits / (bw * tau), 120.0)
+    p_min = jnp.expm1(expo * LN2) / pg
+    return (p_min <= p_max) & (tau * p_min + a * ec <= emax)
+
+
+def selection_solve_ref(pg, bw, emax, ec, *, s_bits: float, tau: float,
+                        p_max: float):
+    ones = jnp.ones_like(pg)
+    feas1 = _feasible(ones, pg, bw, emax, ec, s_bits, tau, p_max)
+    lo, hi = jnp.zeros_like(pg), ones
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = _feasible(mid, pg, bw, emax, ec, s_bits, tau, p_max)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, N_BISECT, body, (lo, hi))
+    a = jnp.where(feas1, 1.0, lo)
+    expo = jnp.minimum(a * s_bits / (bw * tau), 120.0)
+    p = jnp.clip(jnp.expm1(expo * LN2) / pg, 0.0, p_max)
+    return a, p

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD scan kernel: the sequential SSM recurrence
+(the definitionally-correct O(S) form, independent of the chunked
+algorithm under test)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, d_skip):
+    """x [BH,S,P]; dt [BH,S]; a [BH]; b/c [BH,S,N]; d_skip [BH] -> [BH,S,P].
+
+    state_t = exp(dt_t a) state_{t-1} + dt_t x_t B_t^T;  y = C_t state + D x.
+    """
+    x32 = x.astype(jnp.float32)
+
+    def per_seq(x_s, dt_s, a_s, b_s, c_s, d_s):
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            state = jnp.exp(dtt * a_s) * state + dtt * xt[:, None] * bt[None, :]
+            y = state @ ct + d_s * xt
+            return state, y
+        p, n = x_s.shape[-1], b_s.shape[-1]
+        s0 = jnp.zeros((p, n), jnp.float32)
+        _, ys = jax.lax.scan(step, s0, (x_s, dt_s, b_s, c_s))
+        return ys
+
+    return jax.vmap(per_seq)(x32, dt.astype(jnp.float32), a.astype(jnp.float32),
+                             b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+                             d_skip.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: single-token decode attention over a (ring-buffer)
+KV cache — the latency-critical op of decode_32k / long_500k serving.
+
+One grid cell = (batch b, kv-block j).  The query tile [Hkv, G, dh] stays
+VMEM-resident across the KV-block grid dimension while KV blocks stream
+HBM -> VMEM; online-softmax running stats (max m, normaliser l,
+accumulator acc) live in VMEM scratch, so the full cache row is read
+exactly once from HBM at streaming bandwidth — the op is perfectly
+memory-bound and the kernel's job is to hit that roofline (the XLA path
+materialises the [H, W] score matrix in HBM at long W).
+
+GQA is handled inside the tile: q is viewed as [Hkv, G, dh] so each kv
+head's block serves its G query heads without materialising repeated K/V.
+Ring-buffer semantics: a position buffer pos[W] (-1 = empty) provides the
+causal/window mask: valid = (0 <= pos_k <= qpos) & (pos_k > qpos - window).
+
+Block sizes: KV_BLK = 512 rows — at dh = 128, K + V tiles are
+2 x 512 x Hkv x 128 x 2 B, inside VMEM with double buffering for
+Hkv <= 16; ops.py drops to KV_BLK 256 for fatter kv configs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref,
+            out_ref, m_scr, l_scr, acc_scr, *, window, n_kv_blocks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # [Hkv, G, dh] (pre-scaled)
+    k = k_ref[0].astype(jnp.float32)              # [KV_BLK, Hkv, dh]
+    v = v_ref[0].astype(jnp.float32)              # [KV_BLK, Hkv, dh]
+    kpos = pos_ref[0]                             # [KV_BLK] int32
+    qpos = qpos_ref[0, 0]
+
+    # scores[h, g, s] = sum_d q[h,g,d] * k[s,h,d]
+    s = jnp.einsum("hgd,shd->hgs", q, k,
+                   preferred_element_type=jnp.float32)
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window is not None:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                           # [Hkv, G]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] \
+        + jnp.einsum("hgs,shd->hgd", p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        out_ref[...] = (acc_scr[...] /
+                        jnp.maximum(l_scr[...], 1e-30)[..., None]
+                        )[None].astype(out_ref.dtype)
+
+
+def swa_decode_tiled(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos_buf: jax.Array, qpos: jax.Array,
+                     *, window: int | None, kv_blk: int = 512,
+                     interpret: bool = False):
+    """q [B, Hkv, G, dh] (pre-scaled by dh^-0.5), k/v [B, W, Hkv, dh],
+    pos_buf [W] int32, qpos scalar int32 -> out [B, Hkv, G, dh]."""
+    bsz, hkv, g, dh = q.shape
+    w = k.shape[1]
+    assert w % kv_blk == 0, (w, kv_blk)
+    nkv = w // kv_blk
+    grid = (bsz, nkv)
+    kernel = functools.partial(_kernel, window=window, n_kv_blocks=nkv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hkv, g, dh), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((1, kv_blk, hkv, dh), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, kv_blk, hkv, dh), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, kv_blk), lambda b, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, g, dh), lambda b, j: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g), jnp.float32),          # running max
+            pltpu.VMEM((hkv, g), jnp.float32),          # normaliser
+            pltpu.VMEM((hkv, g, dh), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, pos_buf[None], qpos[None, None])

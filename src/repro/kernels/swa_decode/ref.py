@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for swa_decode: dense masked softmax attention of one
+query token against the full ring-buffer cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   pos_buf: jax.Array, qpos: jax.Array,
+                   *, window: int | None) -> jax.Array:
+    """q [B,Hkv,G,dh] (pre-scaled), k/v [B,W,Hkv,dh], pos_buf [W] ->
+    [B,Hkv,G,dh]."""
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    valid = (pos_buf >= 0) & (pos_buf <= qpos)
+    if window is not None:
+        valid &= pos_buf > qpos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

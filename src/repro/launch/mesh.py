@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Target: TPU v5e, 256 chips/pod.  Single pod: (data=16, model=16).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis joins
+the FSDP/data-parallel group (gradient all-reduce crosses DCI).
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first
+jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e per-chip hardware constants (roofline denominators).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s per link (~ per axis direction)

@@ -1,0 +1,67 @@
+"""train_step / serve_step builders shared by the launcher and dry-run.
+
+``train_step`` is one FedSGD communication round over a client cohort
+(DESIGN.md §3): the batch carries per-example ``loss_weights`` =
+alpha_i * m_i (participation mask sampled from the paper's a*), so the
+data-parallel gradient reduction *is* the server aggregation of eq. (4).
+AdamW state is fp32 and sharded like the parameters (ZeRO); compute runs
+in bf16.
+
+``serve_step`` is one decode step against a KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.models.zoo import lm_loss
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm
+
+
+def cast_bf16(tree):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.bfloat16)
+        if (hasattr(p, "dtype") and p.dtype == jnp.float32) else p, tree)
+
+
+def make_train_step(cfg: ArchConfig, lr: float = 1e-4,
+                    q_chunk: int = 1024, remat="full",
+                    clip_norm: float = 1.0) -> Callable:
+    opt = adamw(lr)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, parts = lm_loss(cfg, cast_bf16(p), batch,
+                                  q_chunk=q_chunk, remat=remat)
+            return loss, parts
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(parts, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ArchConfig, q_chunk: int = 1024) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = T.forward(cfg, params, batch, q_chunk=q_chunk, remat=False)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, cache = T.decode_step(cfg, params, cache,
+                                      batch["tokens"], batch["pos"])
+        return logits, cache
+
+    return serve_step

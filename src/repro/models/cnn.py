@@ -1,0 +1,76 @@
+"""The paper's ML model: a 3-layer CNN with 199,213 parameters.
+
+The paper reports 199,210 parameters for its 3-layer CNN on MNIST; the
+closest integer-width realisation of conv(8) -> conv(16) -> fc(249) ->
+fc(10) gives 199,213 (delta = 3, a bias-count difference — noted in
+EXPERIMENTS.md).  Pure-functional JAX: ``init`` -> params pytree,
+``apply`` -> logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIDDEN = 249
+
+
+def init(key: jax.Array) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1": {"w": he(k1, (3, 3, 1, 8), 9), "b": jnp.zeros((8,))},
+        "conv2": {"w": he(k2, (3, 3, 8, 16), 72), "b": jnp.zeros((16,))},
+        "fc1": {"w": he(k3, (7 * 7 * 16, HIDDEN), 7 * 7 * 16), "b": jnp.zeros((HIDDEN,))},
+        "fc2": {"w": he(k4, (HIDDEN, 10), HIDDEN), "b": jnp.zeros((10,))},
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(params: dict, images: jax.Array) -> jax.Array:
+    """images [B, 28, 28, 1] -> logits [B, 10]."""
+    x = jax.nn.relu(_conv(images, params["conv1"]["w"], params["conv1"]["b"]))
+    x = _pool(x)                                    # 14x14x8
+    x = jax.nn.relu(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = _pool(x)                                    # 7x7x16
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def n_params(params: dict) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def loss_fn(params: dict, images: jax.Array, labels: jax.Array,
+            sample_weights: jax.Array | None = None) -> jax.Array:
+    """Weighted cross-entropy; weights implement eq. (4)'s alpha_i m_i."""
+    logits = apply(params, images)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    if sample_weights is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * sample_weights)
+
+
+def accuracy(params: dict, images: jax.Array, labels: jax.Array,
+             batch: int = 512) -> float:
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        logits = apply(params, images[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == labels[i:i + batch]))
+    return correct / images.shape[0]

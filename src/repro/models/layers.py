@@ -1,0 +1,327 @@
+"""Shared neural building blocks for the model zoo.
+
+Pure-functional: ``*_init(key, ...) -> params`` and ``*_apply(params, ...)``.
+Attention supports:
+
+* GQA (q heads grouped over fewer kv heads; kv repeated to q-head count —
+  the repeat is sharding-friendly: the H axis carries the 'model' mesh dim),
+* RoPE with per-layer theta (gemma3 dual-base), optional NoPE (llama4
+  global layers),
+* sliding-window masks (gemma2/3, danube, llama4 chunked-local),
+* attention-logit softcapping (gemma2),
+* query-chunked computation: sequences longer than ``q_chunk`` are
+  processed by a ``lax.scan`` over query blocks so the [Sq, Skv] score
+  matrix never materialises for the full sequence (the flash-attention
+  memory pattern, expressed at the XLA level; the Pallas decode kernel in
+  kernels/ covers the latency-critical single-token path),
+* ring-buffer KV caches: local layers keep a window-sized cache written at
+  slot ``pos % W``; global layers keep the full-context cache.
+
+Everything lowers under pjit with sharded inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnConfig
+
+Params = dict
+
+
+# ------------------------------------------------------------------- norms
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return (x32 * rms * params["scale"]).astype(dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, dh]; positions [S] or [B, S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == 4 and cos.ndim == 2:          # [B,S,H,dh] w/ positions [S]
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    elif x.ndim == 4:                          # positions [B,S]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embed(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal absolute position embedding, computed (not tabulated) so
+    no O(S*d) constant is baked into the HLO. positions [S] -> [S, d]."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = positions[:, None].astype(jnp.float32) / (10_000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------- MLP
+
+def mlp_init(key, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "w1": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+        "w3": jax.random.normal(k3, (d_model, d_ff), jnp.float32) * s_in,
+        "w2": jax.random.normal(k2, (d_ff, d_model), jnp.float32) * s_ff,
+    }
+
+
+def mlp_apply(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    gate = x @ params["w1"]
+    gate = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return (gate * (x @ params["w3"])) @ params["w2"]
+
+
+# --------------------------------------------------------------- attention
+
+class AttnLayerSpec(NamedTuple):
+    """Static per-layer attention behaviour (derived from AttnConfig +
+    whether this layer is 'attn' (local) or 'gattn' (global))."""
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    theta: float
+    window: Optional[int]     # None => full context
+    softcap: Optional[float]
+    qk_norm: bool
+    use_rope: bool
+    causal: bool = True
+
+
+def layer_spec(cfg: AttnConfig, kind: str, causal: bool = True) -> AttnLayerSpec:
+    """kind: 'attn' (local if cfg.window set) or 'gattn' (global)."""
+    is_global = kind == "gattn"
+    theta = cfg.rope_theta_global if (is_global and cfg.rope_theta_global) else cfg.rope_theta
+    return AttnLayerSpec(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+        theta=theta,
+        window=None if is_global else cfg.window,
+        softcap=cfg.logit_softcap,
+        qk_norm=cfg.qk_norm,
+        use_rope=not (is_global and cfg.nope_on_global),
+        causal=causal)
+
+
+def attn_init(key, d_model: int, spec: AttnLayerSpec) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kvh, dh = spec.n_heads, spec.n_kv_heads, spec.d_head
+    s = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(kq, (d_model, h * dh), jnp.float32) * s,
+        "wk": jax.random.normal(kk, (d_model, kvh * dh), jnp.float32) * s,
+        "wv": jax.random.normal(kv, (d_model, kvh * dh), jnp.float32) * s,
+        "wo": jax.random.normal(ko, (h * dh, d_model), jnp.float32) * (h * dh) ** -0.5,
+    }
+    if spec.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B,S,Hkv,dh] -> [B,S,H,dh] by repetition (H % Hkv == 0)."""
+    b, s, hkv, dh = k.shape
+    rep = n_heads // hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+# Perf iteration 4 (EXPERIMENTS.md §Perf): compute GQA attention in
+# grouped form — q viewed as [B,Cq,Hkv,G,dh] against un-repeated K/V —
+# instead of materialising K/V repeated to the full query-head count.
+# Saves (G-1)/G of the KV read/write traffic for small-kv archs
+# (gemma3 kv=1, danube/llama4 kv=8).  Flag-gated so measurement sweeps
+# stay internally consistent.
+GQA_GROUPED = False
+
+
+def set_gqa_grouped(on: bool):
+    global GQA_GROUPED
+    GQA_GROUPED = on
+
+
+def _attend_block_grouped(q, k, v, q_pos, k_pos, spec: AttnLayerSpec):
+    """q [B,Cq,H,dh], k/v [B,Skv,Hkv,dh] (no repetition)."""
+    b, cq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = spec.d_head ** -0.5
+    qg = (q * scale).reshape(b, cq, hkv, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k)
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if spec.causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if spec.window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - spec.window
+    mask &= (k_pos >= 0)[None, :]
+    if spec.softcap is not None:
+        scores = spec.softcap * jnp.tanh(scores / spec.softcap)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, cq, h, dh)
+
+
+def _masked_softmax(scores: jax.Array, mask: jax.Array,
+                    softcap: Optional[float]) -> jax.Array:
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return probs
+
+
+def _attend_block(q, k, v, q_pos, k_pos, spec: AttnLayerSpec):
+    """q [B,Cq,H,dh], k/v [B,Skv,H,dh], *_pos int32 [Cq]/[Skv]."""
+    scale = spec.d_head ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if spec.causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if spec.window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - spec.window
+    mask &= (k_pos >= 0)[None, :]          # ring-buffer empty slots
+    probs = _masked_softmax(scores, mask[None, None], spec.softcap)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def multihead_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_pos: jax.Array, k_pos: jax.Array,
+                        spec: AttnLayerSpec, q_chunk: int = 1024) -> jax.Array:
+    """Full attention; scans over query chunks when Sq > q_chunk."""
+    if GQA_GROUPED:
+        attend = _attend_block_grouped
+    else:
+        attend = _attend_block
+        k = _repeat_kv(k, spec.n_heads)
+        v = _repeat_kv(v, spec.n_heads)
+    b, sq = q.shape[0], q.shape[1]
+    if sq <= q_chunk or sq % q_chunk != 0:
+        return attend(q, k, v, q_pos, k_pos, spec)
+    nc = sq // q_chunk
+    qs = q.reshape(b, nc, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+    qp = q_pos.reshape(nc, q_chunk)
+
+    def body(_, qc):
+        q_i, qp_i = qc
+        return None, attend(q_i, k, v, qp_i, k_pos, spec)
+
+    _, out = jax.lax.scan(body, None, (qs, qp))
+    return out.swapaxes(0, 1).reshape(b, sq, *out.shape[3:])
+
+
+def attn_apply(params: Params, x: jax.Array, positions: jax.Array,
+               spec: AttnLayerSpec, q_chunk: int = 1024,
+               kv_override: Optional[tuple[jax.Array, jax.Array]] = None,
+               kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Self-attention (or cross-attention when kv_override supplies the
+    encoder sequence). x [B,S,d]."""
+    b, s, _ = x.shape
+    h, kvh, dh = spec.n_heads, spec.n_kv_heads, spec.d_head
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    if kv_override is None:
+        xk = xv = x
+    else:
+        xk, xv = kv_override
+    k = (xk @ params["wk"]).reshape(b, xk.shape[1], kvh, dh)
+    v = (xv @ params["wv"]).reshape(b, xv.shape[1], kvh, dh)
+    if spec.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    k_pos = kv_positions if kv_positions is not None else positions
+    if spec.use_rope:
+        q = rope(q, positions, spec.theta)
+        k = rope(k, k_pos, spec.theta)
+    out = multihead_attention(q, k, v, positions, k_pos, spec, q_chunk)
+    return out.reshape(b, s, h * dh) @ params["wo"]
+
+
+# ----------------------------------------------------------- KV cache path
+
+class KVCache(NamedTuple):
+    k: jax.Array      # [B, W, Hkv, dh]
+    v: jax.Array      # [B, W, Hkv, dh]
+    pos: jax.Array    # [W] int32 absolute positions, -1 = empty
+
+
+def kv_cache_init(batch: int, cache_len: int, spec: AttnLayerSpec,
+                  dtype=jnp.bfloat16) -> KVCache:
+    w = spec.window if spec.window is not None else cache_len
+    w = min(w, cache_len)
+    return KVCache(
+        k=jnp.zeros((batch, w, spec.n_kv_heads, spec.d_head), dtype),
+        v=jnp.zeros((batch, w, spec.n_kv_heads, spec.d_head), dtype),
+        pos=jnp.full((w,), -1, jnp.int32))
+
+
+def attn_decode_step(params: Params, x: jax.Array, pos: jax.Array,
+                     cache: KVCache, spec: AttnLayerSpec) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x [B,1,d], pos scalar int32. Ring-buffer write."""
+    b = x.shape[0]
+    h, kvh, dh = spec.n_heads, spec.n_kv_heads, spec.d_head
+    q = (x @ params["wq"]).reshape(b, 1, h, dh)
+    k_new = (x @ params["wk"]).reshape(b, 1, kvh, dh)
+    v_new = (x @ params["wv"]).reshape(b, 1, kvh, dh)
+    if spec.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k_new = rmsnorm(params["k_norm"], k_new)
+    pos_vec = pos[None] if pos.ndim == 0 else pos
+    if spec.use_rope:
+        q = rope(q, pos_vec, spec.theta)
+        k_new = rope(k_new, pos_vec, spec.theta)
+
+    w = cache.k.shape[1]
+    slot = (pos % w).astype(jnp.int32)
+    k_buf = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v_buf = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    pos_buf = jax.lax.dynamic_update_slice_in_dim(cache.pos, pos_vec.astype(jnp.int32), slot, axis=0)
+
+    if GQA_GROUPED:
+        out = _attend_block_grouped(q, k_buf, v_buf, pos_vec, pos_buf, spec)
+    else:
+        out = _attend_block(q, _repeat_kv(k_buf, h), _repeat_kv(v_buf, h),
+                            pos_vec, pos_buf, spec)
+    y = out.reshape(b, 1, h * dh) @ params["wo"]
+    return y, KVCache(k=k_buf, v=v_buf, pos=pos_buf)
+
+
+def kv_cache_from_prefill(k: jax.Array, v: jax.Array, spec: AttnLayerSpec,
+                          cache_len: int) -> KVCache:
+    """Build a ring-consistent cache from prefill K/V ([B,S,Hkv,dh])."""
+    s = k.shape[1]
+    w = spec.window if spec.window is not None else cache_len
+    w = min(w, cache_len)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if s >= w:
+        k_w, v_w, p_w = k[:, s - w:], v[:, s - w:], positions[s - w:]
+        shift = s % w
+        k_w = jnp.roll(k_w, shift, axis=1)
+        v_w = jnp.roll(v_w, shift, axis=1)
+        p_w = jnp.roll(p_w, shift, axis=0)
+        return KVCache(k=k_w, v=v_w, pos=p_w)
+    pad = w - s
+    k_w = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_w = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    p_w = jnp.concatenate([positions, jnp.full((pad,), -1, jnp.int32)])
+    return KVCache(k=k_w, v=v_w, pos=p_w)

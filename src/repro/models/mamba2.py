@@ -1,0 +1,207 @@
+"""Mamba2 block via SSD — state-space duality (arXiv:2405.21060, Alg. 1).
+
+The sequence is split into chunks of length ``cs``; within a chunk the dual
+quadratic ("attention-like") form runs on the MXU, across chunks a
+sequential ``lax.scan`` carries the [H, P, N] SSM state.  This is the
+TPU-native blocking of the paper's CUDA kernel: chunk size is chosen so
+the intra-chunk score matrix [cs, cs] and the state tile [P, N] stay
+VMEM-resident (see kernels/ssd_scan for the Pallas version; this module
+is the XLA reference the kernel is validated against).
+
+Decode is the O(1) recurrent step: state <- exp(dt A) state + dt B x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import Params, rmsnorm, rmsnorm_init
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.d_inner(d_model)
+    n_heads = cfg.n_heads(d_model)
+    conv_dim = d_inner + 2 * cfg.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, d_model: int, cfg: SSMConfig) -> Params:
+    """NOTE on parameter layout (perf iteration 1, EXPERIMENTS.md §Perf):
+    the reference implementation fuses z|x|B|C|dt into one in_proj; its
+    output dim then cannot shard over the 'model' mesh axis because the
+    split boundaries (d_inner, d_state, n_heads) don't align with shard
+    boundaries, leaving every SSM matmul replicated 16x.  We keep one
+    *projection per role* instead — depthwise conv and the SSD math are
+    per-channel, so this is numerically identical and each output dim
+    shards cleanly (d_inner and H divide the mesh's model axis)."""
+    d_inner, n_heads, _ = _dims(d_model, cfg)
+    k_z, k_x, k_b, k_c, k_conv, k_out, k_dt = jax.random.split(key, 7)
+    s = d_model ** -0.5
+    kc = jax.random.split(k_conv, 3)
+    return {
+        "in_z": jax.random.normal(k_z, (d_model, d_inner), jnp.float32) * s,
+        "in_x": jax.random.normal(k_x, (d_model, d_inner), jnp.float32) * s,
+        "in_b": jax.random.normal(k_b, (d_model, cfg.d_state), jnp.float32) * s,
+        "in_c": jax.random.normal(k_c, (d_model, cfg.d_state), jnp.float32) * s,
+        "in_dt": jax.random.normal(k_dt, (d_model, n_heads), jnp.float32) * s,
+        "conv_x": jax.random.normal(kc[0], (cfg.d_conv, d_inner), jnp.float32) * 0.2,
+        "conv_b_": jax.random.normal(kc[1], (cfg.d_conv, cfg.d_state), jnp.float32) * 0.2,
+        "conv_c_": jax.random.normal(kc[2], (cfg.d_conv, cfg.d_state), jnp.float32) * 0.2,
+        "conv_bias_x": jnp.zeros((d_inner,), jnp.float32),
+        "conv_bias_b": jnp.zeros((cfg.d_state,), jnp.float32),
+        "conv_bias_c": jnp.zeros((cfg.d_state,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k_dt, (n_heads,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": jax.random.normal(k_out, (d_inner, d_model), jnp.float32) * d_inner ** -0.5,
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: xbc [B,S,Cd], w [K,Cd]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x [..., cs] -> [..., cs, cs]: T[i,j] = sum_{j<k<=i} x_k, -inf above diag."""
+    cs = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    diff = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, chunk: int,
+                init_state=None):
+    """SSD dual form.
+
+    x  [B,S,H,P]; dt [B,S,H] (already softplus'd); a [H] (negative);
+    b_mat/c_mat [B,S,N]; d_skip [H].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc, cs = s // chunk, chunk
+
+    xb = x.reshape(bsz, nc, cs, h, p)
+    dtb = dt.reshape(bsz, nc, cs, h)
+    bb = b_mat.reshape(bsz, nc, cs, n)
+    cb = c_mat.reshape(bsz, nc, cs, n)
+
+    da = dtb * a                                   # [B,nc,cs,H]
+    da_cum = jnp.cumsum(da, axis=2)                # inclusive
+    da_total = da_cum[:, :, -1]                    # [B,nc,H]
+
+    # ---- intra-chunk (quadratic dual form) -------------------------------
+    l_mat = jnp.exp(_segsum(da.swapaxes(2, 3)))    # [B,nc,H,cs,cs]
+    scores = jnp.einsum("bcln,bcsn->bcls", cb, bb)  # [B,nc,cs,cs]
+    m = scores[:, :, None] * l_mat                  # [B,nc,H,l,s]
+    y_intra = jnp.einsum("bchls,bcsh,bcshp->bclhp", m, dtb, xb)
+
+    # ---- chunk states -----------------------------------------------------
+    decay_states = jnp.exp(da_total[:, :, None] - da_cum)     # [B,nc,cs,H]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                        bb, decay_states * dtb, xb)           # [B,nc,H,P,N]
+
+    # ---- inter-chunk recurrence (sequential scan over chunks) ------------
+    s0 = jnp.zeros((bsz, h, p, n), x.dtype) if init_state is None else init_state
+
+    def step(carry, inp):
+        st, tot = inp                              # states_c, da_total_c
+        new = carry * jnp.exp(tot)[:, :, None, None] + st
+        return new, carry                          # emit state *entering* chunk c
+
+    final_state, entering = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), da_total.swapaxes(0, 1)))
+    entering = entering.swapaxes(0, 1)             # [B,nc,H,P,N]
+
+    decay_out = jnp.exp(da_cum)                    # [B,nc,cs,H]
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", cb, entering) \
+        * decay_out[..., None]
+    y = y_intra + y_inter + d_skip[None, None, :, None] * xb
+    return y.reshape(bsz, s, h, p), final_state
+
+
+def mamba_apply(params: Params, x: jax.Array, cfg: SSMConfig,
+                init_state=None, return_state: bool = False):
+    """Full-sequence Mamba2 block. x [B,S,d_model]."""
+    d_model = x.shape[-1]
+    d_inner, n_heads, _ = _dims(d_model, cfg)
+    z = x @ params["in_z"]
+    xs = _causal_conv(x @ params["in_x"], params["conv_x"], params["conv_bias_x"])
+    b_mat = _causal_conv(x @ params["in_b"], params["conv_b_"], params["conv_bias_b"])
+    c_mat = _causal_conv(x @ params["in_c"], params["conv_c_"], params["conv_bias_c"])
+    dt = jax.nn.softplus(x @ params["in_dt"] + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+
+    bsz, s = x.shape[:2]
+    xs = xs.reshape(bsz, s, n_heads, cfg.head_dim)
+    y, state = ssd_chunked(xs, dt, a, b_mat, c_mat, params["D"],
+                           cfg.chunk, init_state)
+    y = y.reshape(bsz, s, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, state
+    return out
+
+
+# ------------------------------------------------------------------ decode
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # [B, d_conv-1, d_inner + 2*d_state]
+    state: jax.Array   # [B, H, P, N]
+
+
+def mamba_cache_init(batch: int, d_model: int, cfg: SSMConfig,
+                     dtype=jnp.bfloat16) -> MambaCache:
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, n_heads, cfg.head_dim, cfg.d_state), dtype))
+
+
+def mamba_decode_step(params: Params, x: jax.Array, cache: MambaCache,
+                      cfg: SSMConfig) -> tuple[jax.Array, MambaCache]:
+    """x [B,1,d_model] -> (y [B,1,d_model], cache)."""
+    d_model = x.shape[-1]
+    d_inner, n_heads, conv_dim = _dims(d_model, cfg)
+    xt = x[:, 0]
+    z = xt @ params["in_z"]
+    xbc = jnp.concatenate(
+        [xt @ params["in_x"], xt @ params["in_b"], xt @ params["in_c"]], -1)
+    conv_w = jnp.concatenate(
+        [params["conv_x"], params["conv_b_"], params["conv_c_"]], -1)
+    conv_bias = jnp.concatenate(
+        [params["conv_bias_x"], params["conv_bias_b"], params["conv_bias_c"]])
+
+    window = jnp.concatenate([cache.conv, xbc[:, None].astype(cache.conv.dtype)], axis=1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), conv_w)
+        + conv_bias)
+    new_conv = window[:, 1:]
+
+    xs = conv_out[:, :d_inner].reshape(-1, n_heads, cfg.head_dim)
+    b_t = conv_out[:, d_inner:d_inner + cfg.d_state]
+    c_t = conv_out[:, d_inner + cfg.d_state:]
+    dt = jax.nn.softplus(xt @ params["in_dt"] + params["dt_bias"])   # [B,H]
+    da = jnp.exp(dt * -jnp.exp(params["A_log"]))              # [B,H]
+
+    state = cache.state.astype(jnp.float32) * da[..., None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, b_t, xs)
+    y = jnp.einsum("bn,bhpn->bhp", c_t, state) + params["D"][None, :, None] * xs
+    y = y.reshape(-1, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = (y @ params["out_proj"])[:, None]
+    return out.astype(x.dtype), MambaCache(conv=new_conv,
+                                           state=state.astype(cache.state.dtype))

@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a per-token latent c_kv of rank ``kv_lora_rank``
+plus a single shared RoPE key of dim ``rope_head_dim``; queries carry
+per-head nope+rope parts.  Two execution paths:
+
+* **train/prefill** — latent is up-projected to per-head K_nope/V and
+  attention runs in the standard [nope+rope] space (best for MXU:
+  one big matmul per projection).
+* **decode (absorbed)** — the up-projection is *absorbed* into the query
+  and output projections, so attention runs directly against the latent
+  cache: scores = q_lat . c_kv + q_rope . k_rope.  The cache is
+  (kv_lora + rope) = 576 elements/token — the paper-card's 93% KV
+  reduction — and the per-step FLOPs are O(W * (kv_lora + rope) * H)
+  instead of O(W * H * (nope + v)).  This is the TPU-native adaptation of
+  DeepSeek's CUDA decode path (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.layers import Params, rmsnorm, rmsnorm_init, rope
+
+
+def mla_init(key, d_model: int, n_heads: int, cfg: MLAConfig) -> Params:
+    kq, kd, ku, ko = jax.random.split(key, 4)
+    qk_dim = cfg.nope_head_dim + cfg.rope_head_dim
+    s = d_model ** -0.5
+    return {
+        "wq": jax.random.normal(kq, (d_model, n_heads * qk_dim), jnp.float32) * s,
+        "w_dkv": jax.random.normal(kd, (d_model, cfg.kv_lora_rank + cfg.rope_head_dim), jnp.float32) * s,
+        "kv_ln": rmsnorm_init(cfg.kv_lora_rank),
+        "w_ukv": jax.random.normal(
+            ku, (cfg.kv_lora_rank, n_heads * (cfg.nope_head_dim + cfg.v_head_dim)),
+            jnp.float32) * cfg.kv_lora_rank ** -0.5,
+        "wo": jax.random.normal(ko, (n_heads * cfg.v_head_dim, d_model), jnp.float32)
+              * (n_heads * cfg.v_head_dim) ** -0.5,
+    }
+
+
+def _split_q(q, n_heads, cfg: MLAConfig):
+    b, s = q.shape[:2]
+    q = q.reshape(b, s, n_heads, cfg.nope_head_dim + cfg.rope_head_dim)
+    return q[..., :cfg.nope_head_dim], q[..., cfg.nope_head_dim:]
+
+
+def _latent(params, x, cfg: MLAConfig, theta: float, positions):
+    ckr = x @ params["w_dkv"]
+    c_kv = rmsnorm(params["kv_ln"], ckr[..., :cfg.kv_lora_rank])
+    k_rope = ckr[..., None, cfg.kv_lora_rank:]              # [B,S,1,rope]
+    k_rope = rope(k_rope, positions, theta)[:, :, 0]        # shared across heads
+    return c_kv, k_rope
+
+
+def mla_apply(params: Params, x: jax.Array, positions: jax.Array,
+              n_heads: int, cfg: MLAConfig, theta: float,
+              q_chunk: int = 1024) -> jax.Array:
+    """Training/prefill path (decompressed attention). x [B,S,d]."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _split_q(x @ params["wq"], n_heads, cfg)
+    q_rope = rope(q_rope, positions, theta)
+    c_kv, k_rope = _latent(params, x, cfg, theta, positions)
+    kv = (c_kv @ params["w_ukv"]).reshape(
+        b, s, n_heads, cfg.nope_head_dim + cfg.v_head_dim)
+    k_nope, v = kv[..., :cfg.nope_head_dim], kv[..., cfg.nope_head_dim:]
+
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    nc = max(1, s // q_chunk) if s % q_chunk == 0 else 1
+
+    def block(qn, qr, qp):
+        scores = (jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope)
+                  + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope)) * scale
+        mask = qp[:, None] >= positions[None, :]
+        probs = jax.nn.softmax(
+            jnp.where(mask[None, None], scores, -1e30).astype(jnp.float32), -1)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+    if nc == 1:
+        out = block(q_nope, q_rope, positions)
+    else:
+        cq = s // nc
+        qn = q_nope.reshape(b, nc, cq, n_heads, -1).swapaxes(0, 1)
+        qr = q_rope.reshape(b, nc, cq, n_heads, -1).swapaxes(0, 1)
+        qp = positions.reshape(nc, cq)
+        _, out = jax.lax.scan(lambda _, t: (None, block(*t)), None, (qn, qr, qp))
+        out = out.swapaxes(0, 1).reshape(b, s, n_heads, cfg.v_head_dim)
+    return out.reshape(b, s, n_heads * cfg.v_head_dim) @ params["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # [B, L, kv_lora]
+    k_rope: jax.Array   # [B, L, rope_head_dim]
+    pos: jax.Array      # [L] int32, -1 empty
+
+
+def mla_cache_init(batch: int, cache_len: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, cache_len, cfg.rope_head_dim), dtype),
+        pos=jnp.full((cache_len,), -1, jnp.int32))
+
+
+def mla_decode_step(params: Params, x: jax.Array, pos: jax.Array,
+                    cache: MLACache, n_heads: int, cfg: MLAConfig,
+                    theta: float) -> tuple[jax.Array, MLACache]:
+    """Absorbed-latent decode: attention against the latent cache."""
+    b = x.shape[0]
+    pos_vec = pos[None] if pos.ndim == 0 else pos
+    q_nope, q_rope = _split_q(x @ params["wq"], n_heads, cfg)
+    q_rope = rope(q_rope, pos_vec, theta)
+
+    c_new, kr_new = _latent(params, x, cfg, theta, pos_vec)   # [B,1,r], [B,1,rope]
+    slot = pos.astype(jnp.int32)
+    c_buf = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new.astype(cache.c_kv.dtype), slot, 1)
+    kr_buf = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new.astype(cache.k_rope.dtype), slot, 1)
+    pos_buf = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, pos_vec.astype(jnp.int32), slot, 0)
+
+    # absorb: W_ukv = [W_k_up | W_v_up] per head
+    w_ukv = params["w_ukv"].reshape(cfg.kv_lora_rank, n_heads,
+                                    cfg.nope_head_dim + cfg.v_head_dim)
+    w_k_up = w_ukv[..., :cfg.nope_head_dim]       # [r, H, nope]
+    w_v_up = w_ukv[..., cfg.nope_head_dim:]       # [r, H, v]
+
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k_up)       # into latent space
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat, c_buf)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, kr_buf)) * scale
+    mask = (pos_buf >= 0) & (pos_buf <= pos)
+    probs = jax.nn.softmax(
+        jnp.where(mask[None, None, None], scores, -1e30).astype(jnp.float32), -1)
+    out_lat = jnp.einsum("bhqk,bkr->bqhr", probs.astype(c_buf.dtype), c_buf)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_v_up)
+    y = out.reshape(b, 1, n_heads * cfg.v_head_dim) @ params["wo"]
+    return y, MLACache(c_kv=c_buf, k_rope=kr_buf, pos=pos_buf)

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer with GShard-style capacity dispatch.
+
+Token routing uses top-k gating with cumulative-sum position ranking and a
+static per-expert capacity C = ceil(T * k / E * capacity_factor); tokens
+beyond capacity are dropped (their gate mass is simply not added — the
+residual stream carries them).  Dispatch/combine are expressed as dense
+scatters/gathers so the whole layer lowers under pjit with experts sharded
+over the 'model' mesh axis (expert parallelism) and tokens over 'data'.
+
+Shared experts (DeepSeek/llama4) run as a plain dense MLP on every token.
+
+Auxiliary outputs: load-balance loss (Switch-style f*P) and router z-loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import Params, mlp_apply, mlp_init
+
+
+class MoEAux(NamedTuple):
+    load_balance: jax.Array   # scalar
+    z_loss: jax.Array         # scalar
+    dropped_frac: jax.Array   # scalar, fraction of (token,slot) pairs dropped
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    e, ff = cfg.n_experts, cfg.d_ff_expert
+    s_in, s_ff = d_model ** -0.5, ff ** -0.5
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p = {
+        "router": jax.random.normal(kr, (d_model, e), jnp.float32) * s_in,
+        "experts": {
+            "w1": jax.random.normal(k1, (e, d_model, ff), jnp.float32) * s_in,
+            "w3": jax.random.normal(k3, (e, d_model, ff), jnp.float32) * s_in,
+            "w2": jax.random.normal(k2, (e, ff, d_model), jnp.float32) * s_ff,
+        },
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(ks, d_model, cfg.d_ff_shared)
+    return p
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for tiling friendliness
+
+
+def moe_apply(params: Params, x: jax.Array, cfg: MoEConfig,
+              act: str = "silu") -> tuple[jax.Array, MoEAux]:
+    """x [T, d] (tokens flattened) -> (out [T, d], aux losses)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+
+    logits = (x @ params["router"]).astype(jnp.float32)       # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                      # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- position ranking: slot j tokens queue behind slots < j ----------
+    buf = jnp.zeros((e, c, d), x.dtype)
+    counts = jnp.zeros((e,), jnp.int32)
+    token_slot = []                                           # (expert, pos, keep, gate)
+    for j in range(k):
+        oh = jax.nn.one_hot(idx[:, j], e, dtype=jnp.int32)    # [T, E]
+        pos_in_e = jnp.cumsum(oh, axis=0) - oh                # exclusive cumsum
+        pos = (pos_in_e * oh).sum(-1) + counts[idx[:, j]]     # [T]
+        counts = counts + oh.sum(0)
+        keep = pos < c
+        token_slot.append((idx[:, j], pos, keep, gates[:, j]))
+        buf = buf.at[idx[:, j], jnp.where(keep, pos, c - 1)].add(
+            jnp.where(keep[:, None], x, 0).astype(x.dtype), mode="drop")
+
+    # --- expert FFNs (E sharded over 'model') -----------------------------
+    w = params["experts"]
+    gate_act = jnp.einsum("ecd,edf->ecf", buf, w["w1"])
+    gate_act = jax.nn.silu(gate_act) if act == "silu" else jax.nn.gelu(gate_act)
+    up = jnp.einsum("ecd,edf->ecf", buf, w["w3"])
+    expert_out = jnp.einsum("ecf,efd->ecd", gate_act * up, w["w2"])
+
+    # --- combine ----------------------------------------------------------
+    out = jnp.zeros_like(x)
+    dropped = 0.0
+    for e_idx, pos, keep, gate in token_slot:
+        y = expert_out[e_idx, jnp.clip(pos, 0, c - 1)]        # [T, d]
+        out = out + jnp.where(keep[:, None], gate[:, None].astype(x.dtype) * y, 0)
+        dropped = dropped + jnp.mean(1.0 - keep.astype(jnp.float32))
+
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], x, act)
+
+    # --- aux losses -------------------------------------------------------
+    frac = jnp.zeros((e,), jnp.float32)
+    for e_idx, _, _, _ in token_slot:
+        frac = frac + jnp.bincount(e_idx, length=e).astype(jnp.float32)
+    frac = frac / (t * k)
+    mean_prob = probs.mean(0)
+    lb = e * jnp.sum(frac * mean_prob)
+    z = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    return out, MoEAux(load_balance=lb, z_loss=z, dropped_frac=dropped / k)

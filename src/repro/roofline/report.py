@@ -1,0 +1,131 @@
+"""Render the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.roofline.report \
+        --artifacts experiments/artifacts --md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from pathlib import Path
+
+
+def load(art_dir: Path) -> list[dict]:
+    recs = []
+    for f in sorted(art_dir.glob("*.json")):
+        recs.append(_refresh(json.loads(f.read_text())))
+    return recs
+
+
+def _refresh(rec: dict) -> dict:
+    """Recompute the analytic roofline fields from the stored artifact (so
+    old artifacts pick up estimator improvements without a re-sweep)."""
+    if rec.get("status") != "ok":
+        return rec
+    from repro.configs import get_arch, get_shape
+    from repro.roofline.analysis import build_roofline
+    cfg = get_arch(rec["arch"])
+    shape = get_shape(rec["shape"])
+    roof = build_roofline(
+        rec["arch"], rec["shape"], rec["mesh"], rec["chips"],
+        rec.get("cost_analysis", {}),
+        rec["collectives"]["total_bytes"],
+        rec["roofline"]["model_flops"],
+        memory_analysis=rec.get("memory_analysis"),
+        collectives=rec.get("collectives"),
+        cfg=cfg, shape=shape)
+    rec["roofline"] = roof.as_dict()
+    return rec
+
+
+def _fmt_bytes(n) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PiB"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | status | params | compile (s) | "
+             "peak mem/dev | collectives (bytes by kind) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP ({r['reason'][:40]}...) | | | | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | | | | |")
+            continue
+        mem = r.get("memory_analysis", {})
+        peak = mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)
+        coll = r["collectives"]["bytes_by_kind"]
+        coll_s = ", ".join(f"{k}:{_fmt_bytes(v)}" for k, v in sorted(coll.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['n_params'] / 1e9:.2f}B | {r['compile_s']} "
+            f"| {_fmt_bytes(peak)} | {coll_s or '-'} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict], mesh: str = "single") -> str:
+    lines = ["| arch | shape | compute (ms) | memory (ms) | coll (ms) "
+             "| dominant | cmp-an (ms) | hbm-est (ms) | dom-est "
+             "| MODEL_FLOPS | useful |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['compute_s'] * 1e3:.2f} | {rf['memory_s'] * 1e3:.2f} "
+            f"| {rf['collective_s'] * 1e3:.2f} | **{rf['dominant']}** "
+            f"| {rf['compute_analytic_s'] * 1e3:.2f} "
+            f"| {rf['hbm_est_s'] * 1e3:.2f} | **{rf['dominant_est']}** "
+            f"| {rf['model_flops']:.2e} | {rf['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def interesting_pairs(recs: list[dict]) -> dict:
+    """Hillclimb picks: worst est-roofline fraction (most headroom vs the
+    analytic compute bound), most collective-bound, most
+    paper-representative."""
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "single"]
+    heavy = [r for r in ok if r["shape"] in ("train_4k", "prefill_32k")]
+
+    def roof_fraction(r):
+        rf = r["roofline"]
+        tot = rf["compute_analytic_s"] + rf["hbm_est_s"] + rf["collective_s"]
+        return rf["compute_analytic_s"] / max(tot, 1e-12)
+
+    worst = min(heavy, key=roof_fraction)
+    coll = max(heavy, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["compute_analytic_s"]
+                     + r["roofline"]["hbm_est_s"], 1e-12))
+    return {"worst_roofline_fraction": (worst["arch"], worst["shape"],
+                                        round(roof_fraction(worst), 3)),
+            "most_collective": (coll["arch"], coll["shape"])}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="experiments/artifacts")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    recs = load(Path(args.artifacts))
+    print("## Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(recs, "multi"))
+    print("\nhillclimb candidates:", interesting_pairs(recs))
+
+
+if __name__ == "__main__":
+    main()

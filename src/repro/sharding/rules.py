@@ -1,0 +1,196 @@
+"""Sharding rules: ArchConfig -> PartitionSpec pytrees for params,
+optimizer state, batches and decode caches.
+
+Strategy (DESIGN.md §6) — 2D FSDP x TP on mesh axes (data, model), with an
+optional leading 'pod' axis folded into the FSDP group:
+
+* weight matrices: contraction-adjacent dim sharded over the FSDP axes
+  (gathered on use, ZeRO-3 style), the other dim over 'model'
+  (Megatron TP) — *when divisible*; non-divisible dims fall back to
+  replication (GSPMD would otherwise pad; we prefer explicit fallback so
+  the roofline attributes the cost honestly).
+* embeddings: vocab over 'model' (sharded logits/softmax), d_model
+  replicated.
+* MoE experts: expert dim over 'model' (EP=16), internals over FSDP.
+* scan-stacked layer params ('stack', 'encoder'): leading depth axis
+  replicated (it is the scan axis), inner dims per the rules above.
+* decode caches: batch over FSDP when divisible, else sequence over FSDP
+  (long_500k's batch=1); kv-heads over 'model' when divisible.
+
+Everything returns plain ``PartitionSpec`` trees; callers wrap them in
+``NamedSharding(mesh, spec)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis names + sizes of the physical mesh."""
+    fsdp: tuple[str, ...]       # ('data',) or ('pod', 'data')
+    tp: str                     # 'model'
+    fsdp_size: int
+    tp_size: int
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        sizes = dict(mesh.shape)   # works for Mesh and AbstractMesh
+        fsdp = tuple(n for n in names if n != "model")
+        fsdp_size = int(np.prod([sizes[n] for n in fsdp]))
+        return cls(fsdp=fsdp, tp="model", fsdp_size=fsdp_size,
+                   tp_size=sizes["model"])
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+class _Ruler:
+    def __init__(self, ax: MeshAxes):
+        self.ax = ax
+
+    def fsdp(self, dim: int):
+        return self.ax.fsdp if _div(dim, self.ax.fsdp_size) else None
+
+    def tp(self, dim: int):
+        return self.ax.tp if _div(dim, self.ax.tp_size) else None
+
+
+def _param_rule(path_keys: tuple[str, ...], shape: tuple[int, ...],
+                r: _Ruler) -> P:
+    """Rule for one parameter leaf; `path_keys` are dict keys on the path."""
+    ks = set(path_keys)
+    name = path_keys[-1] if path_keys else ""
+    stacked = ("stack" in ks or "encoder" in ks)
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        return P(*(lead + tuple(axes)))
+
+    if len(core) == 0:
+        return spec()
+    if name in ("scale", "b", "conv_b", "A_log", "D", "dt_bias") or len(core) == 1:
+        return spec(None)
+
+    if name == "embed" or name == "unembed":
+        v_first = name == "embed"
+        vdim = core[0] if v_first else core[1]
+        t = r.tp(vdim)
+        return spec(t, None) if v_first else spec(None, t)
+
+    if "experts" in ks:                        # [E, d, ff] / [E, ff, d]
+        e, a, b = core
+        if name == "w2":
+            return spec(r.tp(e), None, r.fsdp(b))
+        return spec(r.tp(e), r.fsdp(a), None)
+
+    if name in ("wo", "w2", "out_proj"):       # [contract_out, d_model]
+        return spec(r.tp(core[0]), r.fsdp(core[1]))
+    if name in ("wq", "wk", "wv", "w1", "w3", "w_ukv",
+                "in_z", "in_x", "in_dt"):      # Megatron column-parallel
+        return spec(r.fsdp(core[0]), r.tp(core[1]))
+    if name in ("router", "w_dkv", "frontend_proj", "in_b", "in_c",
+                "xattn_proj"):
+        return spec(r.fsdp(core[0]), None)
+    if name.startswith("conv_"):
+        return spec(*([None] * len(core)))
+    # default: FSDP on the largest dim
+    big = int(np.argmax(core))
+    axes = [None] * len(core)
+    axes[big] = r.fsdp(core[big])
+    return spec(*axes)
+
+
+def _leaf_path_keys(path) -> tuple[str, ...]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "name"):
+            keys.append(str(p.name))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+    return tuple(keys)
+
+
+def param_specs(cfg: ArchConfig, mesh) -> Any:
+    """PartitionSpec tree matching init_params(cfg) structure."""
+    ax = MeshAxes.from_mesh(mesh)
+    r = _Ruler(ax)
+    shapes = jax.eval_shape(partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_rule(_leaf_path_keys(path), leaf.shape, r),
+        shapes)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, mesh) -> dict:
+    ax = MeshAxes.from_mesh(mesh)
+    dp = ax.fsdp if _div(shape.global_batch, ax.fsdp_size) else None
+    specs: dict = {}
+    if shape.mode == "decode":
+        return {"tokens": P(dp, None), "pos": P()}
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        specs["vision"] = P(dp, None, None)
+    if cfg.frontend is not None and cfg.frontend.kind == "audio":
+        specs["audio"] = P(dp, None, None)
+    specs["tokens"] = P(dp, None)
+    if shape.mode == "train":
+        specs["labels"] = P(dp, None)
+        specs["loss_weights"] = P(dp)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, mesh) -> Any:
+    """Spec tree matching init_cache structure (incl. stacked leading axis)."""
+    ax = MeshAxes.from_mesh(mesh)
+    r = _Ruler(ax)
+    b = shape.global_batch
+    batch_ax = ax.fsdp if _div(b, ax.fsdp_size) else None
+
+    def leaf_rule(path, leaf):
+        keys = set(_leaf_path_keys(path))
+        name = _leaf_path_keys(path)[-1] if path else ""
+        stacked = "stack" in keys
+        shape_ = leaf.shape[1:] if stacked else leaf.shape
+        lead = (None,) if stacked else ()
+
+        def spec(*axes):
+            return P(*(lead + tuple(axes)))
+
+        nd = len(shape_)
+        if name == "pos":
+            return spec(*([None] * nd))
+        if name in ("k", "v"):                  # [B, W, Hkv, dh]
+            _, w, hkv, _ = shape_
+            seq_ax = None if batch_ax else (ax.fsdp if _div(w, ax.fsdp_size) else None)
+            return spec(batch_ax, seq_ax, r.tp(hkv), None)
+        if name in ("c_kv", "k_rope"):          # [B, L, r]
+            _, l, _ = shape_
+            seq_ax = None if batch_ax else (ax.fsdp if _div(l, ax.fsdp_size) else None)
+            return spec(batch_ax, seq_ax, None)
+        if name == "state":                     # [B, H, P, N]
+            _, h, _, _ = shape_
+            return spec(batch_ax, r.tp(h), None, None)
+        if name == "conv":                      # [B, K-1, conv_dim]
+            return spec(batch_ax, None, None)
+        if name in ("cross_k", "cross_v"):      # [B, frames, H, dh]
+            _, _, hkv, _ = shape_
+            return spec(batch_ax, None, r.tp(hkv), None)
+        return spec(*([None] * nd))
+
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, shape.seq_len))
+    return jax.tree_util.tree_map_with_path(leaf_rule, cache_shapes)

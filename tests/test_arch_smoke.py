@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (deliverable f): reduced variants of each
+assigned architecture run a real forward/train step on CPU, asserting
+output shapes and the absence of NaNs; decode consistency checks that
+prefill-then-decode matches the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import InputShape
+from repro.models import transformer as T
+from repro.models.zoo import lm_loss, make_batch
+from repro.optim.optimizers import adamw, apply_updates
+
+SMOKE = InputShape("smoke", 64, 2, "train")
+ARCH_NAMES = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+def _setup(name, rng):
+    cfg = ARCHS[name].reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE, rng)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name, rng):
+    cfg, params, batch = _setup(name, rng)
+    logits, aux = T.forward(cfg, params, batch, q_chunk=32)
+    b = SMOKE.global_batch
+    s = SMOKE.seq_len
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.all(jnp.isfinite(aux)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_updates_and_finite(name, rng):
+    cfg, params, batch = _setup(name, rng)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch, q_chunk=32), has_aux=True)(p)
+        upd, s = opt.update(g, s, p)
+        return apply_updates(p, upd), s, loss
+
+    p1, opt_state, loss1 = step(params, opt_state)
+    p2, _, loss2 = step(p1, opt_state)
+    assert np.isfinite(float(loss1)) and np.isfinite(float(loss2))
+    # params actually moved
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, p1)
+    assert max(jax.tree_util.tree_leaves(diffs)) > 0
+    for leaf in jax.tree_util.tree_leaves(p2):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_forward(name, rng):
+    """Teacher-forced decode over a short sequence reproduces the full
+    forward logits (validates KV caches, ring buffers, SSM recurrence and
+    the SSD chunked scan against each other)."""
+    cfg = ARCHS[name].reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 32
+    shape = InputShape("tiny", s, b, "train")
+    batch = make_batch(cfg, shape, rng, with_weights=False)
+    logits_full, _ = T.forward(cfg, params, batch, q_chunk=1024)
+
+    cache = T.init_cache(cfg, b, cache_len=s, dtype=jnp.float32)
+    # vision prefix tokens are part of forward-only context; decode loop
+    # replays the text tokens one by one.
+    offset = cfg.frontend.n_prefix if (cfg.frontend and cfg.frontend.kind == "vision") else 0
+    if offset:
+        pytest.skip("decode parity with vision prefix covered in VLM test")
+    if cfg.enc_layers:
+        cache = T.prefill_encoder(cfg, params, cache, batch)
+    step = jax.jit(lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos))
+    outs = []
+    for i in range(s):
+        tok = batch["tokens"][:, i:i + 1]
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("name", ["gemma3-1b", "h2o-danube-3-4b"])
+def test_sliding_window_cache_smaller_than_context(name, rng):
+    """Ring-buffer caches stay window-sized: decoding past the window works
+    and matches a full forward on the last positions."""
+    cfg = ARCHS[name].reduced()
+    w = cfg.attn.window
+    assert w is not None and w <= 64
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    b, s = 1, w * 2
+    shape = InputShape("tiny", s, b, "train")
+    batch = make_batch(cfg, shape, rng, with_weights=False)
+    logits_full, _ = T.forward(cfg, params, batch, q_chunk=1024)
+    cache = T.init_cache(cfg, b, cache_len=s, dtype=jnp.float32)
+    step = jax.jit(lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos))
+    for i in range(s):
+        logits, cache = step(params, cache, batch["tokens"][:, i:i + 1],
+                             jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=0.05, atol=0.05)
+
+
+def test_moe_aux_losses_populated(rng):
+    cfg = ARCHS["deepseek-v2-lite-16b"].reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE, rng)
+    _, aux = T.forward(cfg, params, batch, q_chunk=32)
+    assert float(aux[0]) > 0.0          # load balance ~ E[f*P] * E >= 1
+    assert float(aux[1]) > 0.0          # z-loss
+
+
+def test_vlm_prefix_changes_logits(rng):
+    cfg = ARCHS["internvl2-2b"].reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE, rng, with_weights=False)
+    l1, _ = T.forward(cfg, params, batch, q_chunk=32)
+    batch2 = dict(batch, vision=batch["vision"] + 1.0)
+    l2, _ = T.forward(cfg, params, batch2, q_chunk=32)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-3
+
+
+def test_whisper_encoder_conditions_decoder(rng):
+    cfg = ARCHS["whisper-large-v3"].reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE, rng, with_weights=False)
+    l1, _ = T.forward(cfg, params, batch, q_chunk=32)
+    batch2 = dict(batch, audio=batch["audio"] * 0.0)
+    l2, _ = T.forward(cfg, params, batch2, q_chunk=32)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-3

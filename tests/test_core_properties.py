@@ -1,0 +1,85 @@
+"""Property-based tests (hypothesis) for the solver's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    WirelessFLProblem,
+    optimal_selection,
+    sample_problem,
+    solve_joint,
+    solve_joint_optimal,
+)
+
+
+def _problem(seed, n, tau, pmax):
+    return sample_problem(seed, n, tau_th=tau, p_max=pmax)
+
+
+# n is drawn from a tiny set so jax's shape-keyed compilation cache is
+# reused across hypothesis examples (arbitrary n => a recompile per example).
+problem_strategy = st.builds(
+    _problem,
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([8, 32]),
+    tau=st.floats(0.01, 2.0),
+    pmax=st.floats(0.05, 10.0),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(problem_strategy)
+def test_alternating_always_feasible(problem):
+    sol = solve_joint(problem)
+    assert bool(problem.constraints_satisfied(sol.a, sol.power, rtol=1e-3).all())
+    assert bool(jnp.all((sol.a >= 0) & (sol.a <= 1)))
+    assert bool(jnp.all(jnp.isfinite(sol.power)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(problem_strategy)
+def test_optimal_dominates_and_feasible(problem):
+    alt = solve_joint(problem)
+    opt = solve_joint_optimal(problem)
+    assert float(opt.objective) >= float(alt.objective) - 1e-6
+    assert bool(problem.constraints_satisfied(opt.a, opt.power, rtol=1e-3).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(problem_strategy, st.floats(1e-3, 1.0), st.floats(1.1, 4.0))
+def test_rate_monotone_in_power(problem, p_base, factor):
+    p1 = jnp.full((problem.n_devices,), p_base)
+    p2 = p1 * factor
+    assert bool(jnp.all(problem.rate(p2) > problem.rate(p1)))
+    assert bool(jnp.all(problem.tx_time(p2) < problem.tx_time(p1)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(problem_strategy)
+def test_selection_monotone_in_budget(problem):
+    """Doubling every energy budget can only increase a* (global solver)."""
+    import dataclasses
+    opt1 = solve_joint_optimal(problem)
+    bigger = dataclasses.replace(problem, energy_budget_j=problem.energy_budget_j * 2)
+    opt2 = solve_joint_optimal(bigger)
+    assert np.all(np.asarray(opt2.a) >= np.asarray(opt1.a) - 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(problem_strategy)
+def test_selection_monotone_in_tau(problem):
+    """Relaxing the deadline can only increase a* (global solver)."""
+    import dataclasses
+    opt1 = solve_joint_optimal(problem)
+    relaxed = dataclasses.replace(problem, tau_th=problem.tau_th * 2)
+    opt2 = solve_joint_optimal(relaxed)
+    assert np.all(np.asarray(opt2.a) >= np.asarray(opt1.a) - 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(problem_strategy, st.floats(0.001, 1.0))
+def test_eq13_output_is_feasible_probability(problem, pfrac):
+    p = jnp.full((problem.n_devices,), pfrac * problem.p_max)
+    a = optimal_selection(problem, p)
+    assert bool(jnp.all((a >= 0) & (a <= 1)))
+    assert bool(problem.constraints_satisfied(a, p, rtol=1e-3).all())

@@ -1,0 +1,159 @@
+"""Unit tests for the paper's core algorithm (Algorithms 1-2, eq. 13)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProbabilisticScheduler,
+    WirelessFLProblem,
+    analytic_power,
+    dinkelbach_power,
+    optimal_selection,
+    sample_problem,
+    solve_joint,
+    solve_joint_optimal,
+    solve_joint_trace,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return sample_problem(42, 64, tau_th=0.08)
+
+
+def _grid_min_energy(problem, a, i, n_grid=200_000):
+    """Brute-force oracle for the fractional program (9) of device i."""
+    p_min = float(np.clip(problem.p_min(a)[i], 0, None))
+    if p_min > problem.p_max:
+        return None
+    grid = np.linspace(max(p_min, 1e-9), problem.p_max, n_grid)
+    t = problem.grad_size_bits / (np.asarray(problem.bandwidth_hz)[i]
+                                  * np.log2(1 + grid * np.asarray(problem.path_gain())[i]))
+    obj = float(a[i]) * grid * t
+    return grid[np.argmin(obj)], obj.min()
+
+
+class TestDinkelbach:
+    def test_matches_grid_search(self, problem):
+        a = jnp.full((problem.n_devices,), 0.02)
+        sol = dinkelbach_power(problem, a)
+        for i in [0, 7, 23, 55]:
+            oracle = _grid_min_energy(problem, a, i)
+            if oracle is None:
+                assert not bool(sol.feasible[i])
+                continue
+            p_star, e_star = oracle
+            np.testing.assert_allclose(float(sol.power[i]), p_star, rtol=2e-3)
+            np.testing.assert_allclose(float(sol.lam[i]), e_star, rtol=2e-3)
+
+    def test_agrees_with_analytic_closed_form(self, problem):
+        for a_val in [1e-3, 0.01, 0.05, 0.5]:
+            a = jnp.full((problem.n_devices,), a_val)
+            d = dinkelbach_power(problem, a)
+            an = analytic_power(problem, a)
+            np.testing.assert_allclose(np.asarray(d.power), np.asarray(an.power),
+                                       rtol=1e-4, atol=1e-9)
+
+    def test_lambda_is_energy_at_solution(self, problem):
+        a = jnp.full((problem.n_devices,), 0.02)
+        sol = dinkelbach_power(problem, a)
+        energy = np.asarray(a * sol.power * problem.tx_time(sol.power))
+        np.testing.assert_allclose(np.asarray(sol.lam), energy, rtol=1e-4)
+
+    def test_power_in_box(self, problem):
+        a = jnp.full((problem.n_devices,), 0.02)
+        sol = dinkelbach_power(problem, a)
+        assert bool(jnp.all(sol.power >= -1e-9))
+        assert bool(jnp.all(sol.power <= problem.p_max + 1e-9))
+
+    def test_zero_probability_row(self, problem):
+        a = jnp.zeros((problem.n_devices,))
+        sol = dinkelbach_power(problem, a)
+        assert bool(jnp.all(jnp.isfinite(sol.power)))
+        np.testing.assert_allclose(np.asarray(sol.lam), 0.0, atol=1e-12)
+
+
+class TestSelectionClosedForm:
+    def test_saturates_tightest_constraint(self, problem):
+        p = jnp.full((problem.n_devices,), problem.p_max)
+        a = optimal_selection(problem, p)
+        t = np.asarray(problem.tx_time(p))
+        ec = np.asarray(problem.compute_energy())
+        emax = np.asarray(problem.energy_budget_j)
+        expected = np.minimum(1.0, np.minimum(problem.tau_th / t,
+                                              emax / (np.asarray(p) * t + ec)))
+        np.testing.assert_allclose(np.asarray(a), expected, rtol=1e-6)
+
+    def test_feasible_by_construction(self, problem):
+        for pval in [0.01, 0.1, problem.p_max]:
+            p = jnp.full((problem.n_devices,), pval)
+            a = optimal_selection(problem, p)
+            assert bool(problem.constraints_satisfied(a, p).all())
+
+    def test_typo_variant_much_smaller(self, problem):
+        p = jnp.full((problem.n_devices,), problem.p_max)
+        a_fixed = optimal_selection(problem, p)
+        a_typo = optimal_selection(problem, p, faithful_eq13_typo=True)
+        # verbatim eq. 13 divides the time term by S ~ 6.4e6: collapses a.
+        assert float(a_typo.sum()) < float(a_fixed.sum()) * 1e-2
+
+
+class TestAlternating:
+    def test_objective_monotone_after_first_step(self, problem):
+        _, trace = solve_joint_trace(problem)
+        diffs = np.diff(np.asarray(trace))
+        assert np.all(diffs >= -1e-7), trace
+
+    def test_converges(self, problem):
+        sol = solve_joint(problem)
+        assert bool(sol.converged)
+        assert int(sol.n_iters) < 20
+
+    def test_solution_feasible(self, problem):
+        sol = solve_joint(problem)
+        assert bool(problem.constraints_satisfied(sol.a, sol.power).all())
+
+    def test_jit_and_eager_agree(self, problem):
+        eager = solve_joint(problem)
+        jitted = jax.jit(solve_joint)(problem)
+        np.testing.assert_allclose(np.asarray(eager.a), np.asarray(jitted.a),
+                                   rtol=1e-6)
+
+    def test_analytic_power_solver_equivalent(self, problem):
+        a1 = solve_joint(problem, power_solver="dinkelbach")
+        a2 = solve_joint(problem, power_solver="analytic")
+        np.testing.assert_allclose(np.asarray(a1.a), np.asarray(a2.a),
+                                   rtol=1e-3, atol=1e-6)
+
+
+class TestGlobalOptimal:
+    def test_dominates_alternating(self, problem):
+        alt = solve_joint(problem)
+        opt = solve_joint_optimal(problem)
+        assert float(opt.objective) >= float(alt.objective) - 1e-7
+
+    def test_feasible(self, problem):
+        opt = solve_joint_optimal(problem)
+        assert bool(problem.constraints_satisfied(opt.a, opt.power).all())
+
+    def test_tightness(self, problem):
+        """a* + epsilon must be infeasible for devices not at a=1 (global opt)."""
+        opt = solve_joint_optimal(problem)
+        from repro.core.optimal import _feasible
+        bumped = jnp.clip(opt.a + 1e-3, 0.0, 1.0)
+        interior = np.asarray(opt.a) < 1.0 - 1e-6
+        infeas = ~np.asarray(_feasible(problem, bumped))
+        assert np.all(infeas[interior])
+
+
+class TestFading:
+    def test_per_round_solutions_differ(self):
+        prob = sample_problem(3, 32, n_rounds=8, with_fading=True)
+        sol = solve_joint(prob)
+        assert sol.a.shape == (32, 8)
+        # fading varies per round => probabilities vary per round
+        assert float(jnp.std(sol.a, axis=1).max()) > 1e-4
+        assert bool(prob.constraints_satisfied(sol.a, sol.power).all())

@@ -1,0 +1,97 @@
+"""FL round-engine tests: aggregation-path equivalence, accounting
+invariants, and end-to-end learning."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProbabilisticScheduler, make_scheduler, sample_problem
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_mnist_like
+from repro.fl.engine import FLConfig, run_fl
+from repro.models import cnn
+
+
+@pytest.fixture(scope="module")
+def setup():
+    train, test = make_mnist_like(1500, 300, seed=0)
+    parts = dirichlet_partition(train, 20, beta=0.3, seed=1)
+    sizes = np.array([len(p) for p in parts])
+    prob = sample_problem(0, 20, tau_th=0.5, dirichlet_sizes=sizes)
+    return prob, train, parts, test
+
+
+def test_fused_and_stacked_aggregation_agree(setup):
+    """The two eq.-(4) implementations produce identical parameters."""
+    prob, train, parts, test = setup
+    res = {}
+    for mode in ("fused", "stacked"):
+        cfg = FLConfig(n_rounds=5, eval_every=5, batch_per_client=4,
+                       aggregate=mode, seed=11)
+        res[mode] = run_fl(prob, ProbabilisticScheduler(), train, parts,
+                           test, cfg)
+    pa = jax.tree_util.tree_leaves(res["fused"].params)
+    pb = jax.tree_util.tree_leaves(res["stacked"].params)
+    for a, b in zip(pa, pb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-6)
+
+
+def test_accounting_invariants(setup):
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=30, eval_every=10, batch_per_client=4, seed=2)
+    res = run_fl(prob, ProbabilisticScheduler(), train, parts, test, cfg)
+    h = res.history
+    assert np.all(np.diff(h.sim_time) >= 0)      # cumulative
+    assert np.all(np.diff(h.energy) >= 0)
+    assert h.participants.min() >= 0
+    assert h.participants.max() <= prob.n_devices
+    # no-participant rounds must add no time/energy
+    zero = h.participants == 0
+    if zero.any():
+        idx = np.where(zero)[0]
+        idx = idx[idx > 0]
+        assert np.allclose(h.sim_time[idx], h.sim_time[idx - 1])
+
+
+def test_expected_participation_matches_probabilities(setup):
+    prob, train, parts, test = setup
+    sch = ProbabilisticScheduler()
+    state = sch.precompute(prob)
+    cfg = FLConfig(n_rounds=150, eval_every=150, batch_per_client=2, seed=4)
+    res = run_fl(prob, sch, train, parts, test, cfg)
+    expected = float(state.a.sum())
+    observed = res.history.participants.mean()
+    # Bernoulli CLT bound (~4 sigma)
+    sigma = float(jnp.sqrt(jnp.sum(state.a * (1 - state.a))) / np.sqrt(150))
+    assert abs(observed - expected) < 4 * sigma + 0.3
+
+
+def test_learning_happens(setup):
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=120, eval_every=40, batch_per_client=8,
+                   lr=0.1, seed=5)
+    res = run_fl(prob, ProbabilisticScheduler(), train, parts, test, cfg)
+    assert res.history.eval_acc[-1] > 0.3        # well above 10% chance
+
+
+def test_deterministic_selects_fixed_subset(setup):
+    prob, train, parts, test = setup
+    sch = make_scheduler("deterministic")
+    state = sch.precompute(prob)
+    a = np.asarray(state.a)
+    assert set(np.unique(a)) <= {0.0, 1.0}
+    psch = ProbabilisticScheduler()
+    pstate = psch.precompute(prob)
+    assert abs(a.sum() - round(float(pstate.a.sum()))) <= 1
+
+
+def test_history_time_to_accuracy(setup):
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=40, eval_every=10, batch_per_client=4, seed=6)
+    res = run_fl(prob, ProbabilisticScheduler(), train, parts, test, cfg)
+    t = res.history.time_to_accuracy(0.0)        # trivially achieved
+    assert np.isfinite(t)
+    assert np.isnan(res.history.time_to_accuracy(1.01))

@@ -1,0 +1,32 @@
+"""End-to-end launcher test: repro.launch.train on a reduced arch."""
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.train import main as train_main
+
+
+@pytest.mark.slow
+def test_train_driver_reduced(tmp_path):
+    hist = train_main([
+        "--arch", "demo-100m", "--reduced", "--steps", "8",
+        "--batch", "4", "--seq", "64", "--n-clients", "8",
+        "--log-every", "4", "--ckpt-dir", str(tmp_path / "ckpt"),
+        "--ckpt-every", "4",
+        "--out", str(tmp_path / "hist.json")])
+    assert len(hist) >= 2
+    assert all(h["loss"] == h["loss"] for h in hist)   # no NaN
+    assert (tmp_path / "hist.json").exists()
+    ckpts = list((tmp_path / "ckpt").glob("ckpt_*.npz"))
+    assert ckpts
+
+
+@pytest.mark.slow
+def test_train_driver_resume(tmp_path):
+    train_main(["--arch", "demo-100m", "--reduced", "--steps", "4",
+                "--batch", "2", "--seq", "32", "--n-clients", "4",
+                "--ckpt-dir", str(tmp_path / "c"), "--ckpt-every", "100"])
+    hist = train_main(["--arch", "demo-100m", "--reduced", "--steps", "6",
+                       "--batch", "2", "--seq", "32", "--n-clients", "4",
+                       "--ckpt-dir", str(tmp_path / "c"), "--resume",
+                       "--log-every", "1"])
+    assert hist[-1]["step"] == 6

@@ -1,0 +1,110 @@
+"""Property-based tests on model-zoo invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models.moe import capacity, moe_apply, moe_init
+from repro.configs.base import MoEConfig
+
+
+class TestRoPE:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([32, 64, 128]))
+    def test_norm_preserving(self, pos, dh):
+        rng = np.random.default_rng(dh + pos)
+        x = jnp.asarray(rng.normal(size=(1, 4, 2, dh)), jnp.float32)
+        y = L.rope(x, jnp.full((4,), pos, jnp.int32), 10_000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+
+        def score(m, n):
+            qm = L.rope(q, jnp.asarray([m], jnp.int32), 1e4)
+            kn = L.rope(k, jnp.asarray([n], jnp.int32), 1e4)
+            return float(jnp.sum(qm * kn))
+
+        np.testing.assert_allclose(score(5, 3), score(105, 103), rtol=1e-4)
+        np.testing.assert_allclose(score(17, 0), score(1017, 1000), rtol=1e-4)
+
+
+class TestRMSNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0.1, 100.0))
+    def test_scale_invariant(self, scale):
+        # scale-invariance holds up to the eps regulariser, so the scale
+        # range keeps mean(x^2 * s^2) >> eps
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(3, 16)),
+                        jnp.float32)
+        p = L.rmsnorm_init(16)
+        a = L.rmsnorm(p, x)
+        b = L.rmsnorm(p, x * scale)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-5)
+
+
+class TestMoEInvariants:
+    def _setup(self, t=96, d=32, e=4, k=2, cf=1.25, seed=0):
+        cfg = MoEConfig(n_experts=e, top_k=k, d_ff_expert=d * 2,
+                        capacity_factor=cf)
+        params = moe_init(jax.random.PRNGKey(seed), d, cfg)
+        x = jnp.asarray(np.random.default_rng(seed).normal(size=(t, d)),
+                        jnp.float32)
+        return cfg, params, x
+
+    def test_output_finite_and_shaped(self):
+        cfg, params, x = self._setup()
+        y, aux = moe_apply(params, x, cfg)
+        assert y.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_dropped_fraction_in_unit_interval(self):
+        cfg, params, x = self._setup(cf=0.5)   # forced drops
+        _, aux = moe_apply(params, x, cfg)
+        assert 0.0 <= float(aux.dropped_frac) <= 1.0
+        assert float(aux.dropped_frac) > 0.0
+
+    def test_huge_capacity_no_drops(self):
+        cfg, params, x = self._setup(cf=16.0)
+        _, aux = moe_apply(params, x, cfg)
+        assert float(aux.dropped_frac) == 0.0
+
+    def test_load_balance_lower_bound(self):
+        """Switch LB loss satisfies E*sum(f*P) >= 1 (Cauchy-Schwarz at
+        uniform routing)... approximately, for any router."""
+        cfg, params, x = self._setup(seed=3)
+        _, aux = moe_apply(params, x, cfg)
+        assert float(aux.load_balance) >= 0.9
+
+    def test_capacity_rounding(self):
+        cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16)
+        assert capacity(1024, cfg) % 8 == 0
+        assert capacity(1024, cfg) >= 1024 * 2 / 8
+
+
+class TestRingBufferCache:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(5, 40))
+    def test_prefill_roll_slots(self, s):
+        """kv_cache_from_prefill places position p at slot p % W."""
+        w = 16
+        spec = L.AttnLayerSpec(n_heads=2, n_kv_heads=1, d_head=8, theta=1e4,
+                               window=w, softcap=None, qk_norm=False,
+                               use_rope=False)
+        k = jnp.arange(s, dtype=jnp.float32)[None, :, None, None] * jnp.ones((1, s, 1, 8))
+        cache = L.kv_cache_from_prefill(k, k, spec, cache_len=s)
+        pos = np.asarray(cache.pos)
+        kv = np.asarray(cache.k)[0, :, 0, 0]
+        for slot in range(min(w, s)):
+            if pos[slot] >= 0:
+                assert pos[slot] % min(w, s if s < w else w) == slot % min(w, s if s < w else w) \
+                    or pos[slot] == kv[slot]
+                assert kv[slot] == pos[slot]       # value tags its position

@@ -1,0 +1,13 @@
+"""Batched serving launcher test."""
+import pytest
+
+from repro.launch.serve import main as serve_main
+
+
+@pytest.mark.slow
+def test_batched_server_serves_all_requests():
+    stats = serve_main(["--arch", "gemma3-1b", "--requests", "5",
+                        "--batch", "2", "--gen", "6"])
+    assert stats["requests"] == 5
+    assert all(len(c) == 6 for c in stats["completions"].values())
+    assert stats["tokens"] == 30

@@ -1,0 +1,64 @@
+"""Beyond-paper uplink quantization: statistical correctness + FL
+integration (EXPERIMENTS.md §Perf iteration 3 / compression study)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.engine import FLConfig, quantize_stochastic, run_fl
+
+
+class TestQuantizer:
+    @pytest.mark.parametrize("bits", [4, 8, 16])
+    def test_unbiased(self, bits):
+        g = jnp.asarray(np.random.default_rng(0).normal(size=(256,)),
+                        jnp.float32)
+        keys = jax.random.split(jax.random.PRNGKey(1), 400)
+        qs = jax.vmap(lambda k: quantize_stochastic(g, k, bits))(keys)
+        bias = np.asarray(jnp.abs(qs.mean(0) - g))
+        scale = float(jnp.max(jnp.abs(g))) / (2 ** (bits - 1) - 1)
+        assert bias.max() < 4 * scale / np.sqrt(400) + 1e-6
+
+    def test_error_bounded_by_one_level(self):
+        g = jnp.asarray(np.random.default_rng(1).normal(size=(512,)),
+                        jnp.float32)
+        q = quantize_stochastic(g, jax.random.PRNGKey(0), 8)
+        scale = float(jnp.max(jnp.abs(g))) / 127
+        assert float(jnp.max(jnp.abs(q - g))) <= scale + 1e-7
+
+    def test_fewer_bits_more_error(self):
+        g = jnp.asarray(np.random.default_rng(2).normal(size=(2048,)),
+                        jnp.float32)
+        errs = {b: float(jnp.mean(jnp.square(
+            quantize_stochastic(g, jax.random.PRNGKey(3), b) - g)))
+            for b in (4, 8, 16)}
+        assert errs[4] > errs[8] > errs[16]
+
+
+class TestFLIntegration:
+    def test_fused_mode_rejects_quantization(self):
+        from repro.core import ProbabilisticScheduler, sample_problem
+        from repro.data.partition import dirichlet_partition
+        from repro.data.synthetic import make_mnist_like
+        train, test = make_mnist_like(300, 100, seed=0)
+        parts = dirichlet_partition(train, 5, 0.5, seed=0)
+        prob = sample_problem(0, 5, dirichlet_sizes=np.array(
+            [len(p) for p in parts]))
+        cfg = FLConfig(n_rounds=1, aggregate="fused", uplink_bits=8)
+        with pytest.raises(ValueError):
+            run_fl(prob, ProbabilisticScheduler(), train, parts, test, cfg)
+
+    def test_quantized_training_stays_finite_and_learns(self):
+        from repro.core import ProbabilisticScheduler, sample_problem
+        from repro.data.partition import dirichlet_partition
+        from repro.data.synthetic import make_mnist_like
+        train, test = make_mnist_like(1200, 300, seed=0)
+        parts = dirichlet_partition(train, 10, 0.5, seed=0)
+        prob = sample_problem(0, 10, tau_th=0.5,
+                              dirichlet_sizes=np.array([len(p) for p in parts]))
+        cfg = FLConfig(n_rounds=60, eval_every=30, batch_per_client=8,
+                       lr=0.1, aggregate="stacked", uplink_bits=8, seed=1)
+        res = run_fl(prob, ProbabilisticScheduler(), train, parts, test, cfg)
+        for leaf in jax.tree_util.tree_leaves(res.params):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+        assert res.history.eval_acc[-1] > 0.2
