@@ -89,6 +89,38 @@ def bench_solver_scaling(full: bool):
              f"objective={obj_o:.5f} (+{(obj_o / max(obj_a, 1e-12) - 1):.2%})")
 
 
+def bench_batch_solver_scaling(full: bool):
+    """Batched multi-scenario engine (``solve_joint_batch``) vs the naive
+    per-problem python loop: instances/sec at growing batch sizes."""
+    from repro.core import solve_joint, solve_joint_batch, stack_problems
+    from repro.core.scenarios import make_problem
+
+    n = 64                      # devices per instance
+    batch_sizes = [8, 64, 256] if full else [8, 64]
+    probs = [make_problem("paper_static", seed=i, n_devices=n)
+             for i in range(max(batch_sizes))]
+
+    single = jax.jit(solve_joint)
+    jax.block_until_ready(single(probs[0]).a)   # one compile, shared shapes
+
+    def naive_loop(ps):
+        out = [single(p) for p in ps]
+        jax.block_until_ready(out[-1].a)
+        return out
+
+    for bsz in batch_sizes:
+        batch = stack_problems(probs[:bsz])
+        us_batch = _timeit(lambda: solve_joint_batch(batch).a, n=5)
+        us_loop = _timeit(lambda: naive_loop(probs[:bsz]), n=3, warmup=1)
+        ips_batch = bsz / (us_batch / 1e6)
+        ips_loop = bsz / (us_loop / 1e6)
+        emit(f"batch_solver_batched_b{bsz}", us_batch,
+             f"instances_per_sec={ips_batch:.1f}")
+        emit(f"batch_solver_loop_b{bsz}", us_loop,
+             f"instances_per_sec={ips_loop:.1f} "
+             f"batched_speedup={ips_batch / ips_loop:.1f}x")
+
+
 def bench_dinkelbach(full: bool):
     """Algorithm 1 iterations to convergence + agreement with the
     closed-form fast path."""
@@ -199,6 +231,7 @@ def bench_roofline(full: bool):
 BENCHES = {
     "paper_tables": bench_paper_tables,
     "solver_scaling": bench_solver_scaling,
+    "batch_solver_scaling": bench_batch_solver_scaling,
     "dinkelbach": bench_dinkelbach,
     "kernels": bench_kernels,
     "fl_round": bench_fl_round,

@@ -1,6 +1,13 @@
 """Core library: the paper's joint probabilistic client selection and
 power allocation for federated learning (Marnissi et al., 2024)."""
 from repro.core.alternating import JointSolution, solve_joint, solve_joint_trace
+from repro.core.batch import (
+    BatchSolution,
+    ProblemBatch,
+    shard_batch,
+    solve_joint_batch,
+    stack_problems,
+)
 from repro.core.optimal import solve_joint_optimal
 from repro.core.power import PowerSolution, analytic_power, dinkelbach_power, energy_bound_ok
 from repro.core.problem import WirelessFLProblem, sample_problem
@@ -14,10 +21,20 @@ from repro.core.schedulers import (
     UniformScheduler,
     make_scheduler,
 )
+from repro.core.scenarios import (
+    SCENARIOS,
+    Scenario,
+    make_batch,
+    make_mixed_batch,
+    make_problem,
+)
 from repro.core.selection import optimal_selection
 
 __all__ = [
     "WirelessFLProblem", "sample_problem",
+    "ProblemBatch", "BatchSolution", "stack_problems", "shard_batch",
+    "solve_joint_batch",
+    "Scenario", "SCENARIOS", "make_problem", "make_batch", "make_mixed_batch",
     "PowerSolution", "dinkelbach_power", "analytic_power", "energy_bound_ok",
     "optimal_selection",
     "JointSolution", "solve_joint", "solve_joint_trace", "solve_joint_optimal",

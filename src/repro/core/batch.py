@@ -1,0 +1,276 @@
+"""Batched multi-scenario fleet solver: many problem (7) instances at once.
+
+The paper's Algorithm 2 solves one 100-device instance.  Ensemble studies
+(fading draws, bandwidth mixes, fleet-size sweeps — cf. Perazzone et al.,
+arXiv:2201.07912 and Guo et al., arXiv:2205.09306, which both evaluate
+over large ensembles of channel realisations) need *thousands* of
+heterogeneous instances.  This module stacks them into one device-sharded
+batch:
+
+* ``ProblemBatch`` — a pytree of ``WirelessFLProblem`` leaves stacked to
+  ``[B, N_max]`` (``[B, N_max, K]`` for fading), with ragged fleet sizes
+  handled by padding plus a ``[B, N_max]`` validity ``mask``.  Padded
+  device slots are constructed so every solver *self-deselects* them
+  (zero energy budget => a* = 0) — no solver change needed.
+* ``stack_problems`` / ``ProblemBatch.unstack`` — build/split the batch.
+* ``solve_joint_batch`` — ``jax.vmap`` of Algorithm 2 (or the exact
+  bisection optimum, or the Pallas ``selection_solve`` kernel fast path)
+  across the batch, jitted once, optionally sharded over the local device
+  mesh with ``jax.sharding.NamedSharding`` along the batch axis.
+
+Static metadata (``p_max``, ``tau_th``, ``grad_size_bits``, ...) is shared
+batch-wide — ``stack_problems`` raises if instances disagree, since those
+fields are compiled into the kernel as constants.
+
+See ``docs/scenarios.md`` for the scenario generators that feed this API
+and ``tests/test_batch_solver.py`` for the agreement guarantees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.alternating import JointSolution, solve_joint
+from repro.core.optimal import solve_joint_optimal
+from repro.core.problem import WirelessFLProblem
+
+# static (non-leaf) fields that must be uniform across a batch
+_STATIC_FIELDS = ("grad_size_bits", "noise_power", "p_max", "tau_th",
+                  "kappa", "n_rounds")
+# array leaves stacked along the new batch axis, with the value used to
+# fill padded device slots.  Padding is chosen so padded slots are
+# *infeasible at any a > 0* (zero energy budget) yet produce no NaN/inf in
+# any solver: distance 1 m keeps path gain finite, weight 0 removes the
+# slot from every objective.
+_PAD_VALUES = dict(distance_m=1.0, bandwidth_hz=1.0, energy_budget_j=0.0,
+                   dataset_size=1.0, cycles_per_sample=1.0, cpu_hz=1.0,
+                   weights=0.0)
+
+
+class BatchSolution(NamedTuple):
+    """Stacked per-instance solutions. All arrays lead with the batch axis."""
+
+    a: jax.Array           # [B, N_max] (or [B, N_max, K])
+    power: jax.Array       # same shape as a
+    objective: jax.Array   # [B]
+    n_iters: jax.Array     # [B] or scalar
+    converged: jax.Array   # [B] bool
+    mask: jax.Array        # [B, N_max] bool — valid device slots
+
+    def instance(self, b: int) -> JointSolution:
+        """Per-instance JointSolution with padding stripped."""
+        n = int(np.sum(np.asarray(self.mask[b])))
+        return JointSolution(a=self.a[b, :n], power=self.power[b, :n],
+                             objective=self.objective[b],
+                             n_iters=jnp.asarray(self.n_iters)[b]
+                             if jnp.ndim(self.n_iters) else self.n_iters,
+                             converged=self.converged[b])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ProblemBatch:
+    """B stacked ``WirelessFLProblem`` instances, padded to a common N_max.
+
+    ``problem`` holds the stacked leaves (``[B, N_max]``; fading
+    ``[B, N_max, K]``); its static metadata is the batch-wide shared
+    configuration.  ``mask[b, i]`` is True iff slot ``i`` of instance ``b``
+    is a real device; ``fleet_sizes[b]`` is the true (unpadded) N.
+    """
+
+    problem: WirelessFLProblem
+    mask: jax.Array          # [B, N_max] bool
+    fleet_sizes: jax.Array   # [B] int32
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.mask.shape[0])
+
+    @property
+    def n_max(self) -> int:
+        return int(self.mask.shape[1])
+
+    def unstack(self) -> list[WirelessFLProblem]:
+        """Split back into per-instance problems (padding stripped)."""
+        sizes = np.asarray(self.fleet_sizes)
+        out = []
+        for b in range(self.batch_size):
+            n = int(sizes[b])
+            kw = {}
+            for f in dataclasses.fields(WirelessFLProblem):
+                v = getattr(self.problem, f.name)
+                if f.name in _PAD_VALUES:
+                    v = v[b, :n]
+                elif f.name == "fading":
+                    v = None if v is None else v[b, :n]
+                kw[f.name] = v
+            out.append(WirelessFLProblem(**kw))
+        return out
+
+
+def _pad_tail(x: jax.Array, n_max: int, fill: float) -> jax.Array:
+    pad = [(0, n_max - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
+    """Stack instances into a ProblemBatch, padding ragged fleet sizes.
+
+    All instances must share the static metadata (``p_max``, ``tau_th``,
+    ``grad_size_bits``, ``noise_power``, ``kappa``, ``n_rounds``) — those
+    are jit-compile-time constants.  Instances may freely differ in fleet
+    size and in every per-device array.  Fading must be all-or-none: a
+    non-fading instance solves one [N] round while a fading one solves
+    [N, K] rounds, so mixing them in one batch would silently change the
+    non-fading instances' objective (summed over K synthetic rounds).
+    Pass explicit unit fading to opt a static-channel instance into a
+    fading batch.
+    """
+    if not problems:
+        raise ValueError("stack_problems needs at least one problem")
+    ref = problems[0]
+    for p in problems[1:]:
+        for f in _STATIC_FIELDS:
+            if getattr(p, f) != getattr(ref, f):
+                raise ValueError(
+                    f"static field {f!r} differs across the batch "
+                    f"({getattr(p, f)} vs {getattr(ref, f)}); solve instances "
+                    "with differing statics in separate batches")
+
+    n_max = max(p.n_devices for p in problems)
+    n_fading = sum(p.fading is not None for p in problems)
+    if 0 < n_fading < len(problems):
+        raise ValueError(
+            f"{n_fading}/{len(problems)} instances carry fading; fading must "
+            "be all-or-none per batch (give static-channel instances "
+            "explicit unit fading to mix them in)")
+
+    stacked: dict[str, jax.Array] = {}
+    for name, fill in _PAD_VALUES.items():
+        stacked[name] = jnp.stack(
+            [_pad_tail(getattr(p, name), n_max, fill) for p in problems])
+    fading = None
+    if n_fading:
+        fading = jnp.stack(
+            [_pad_tail(p.fading, n_max, 1.0) for p in problems])
+
+    sizes = np.array([p.n_devices for p in problems], np.int32)
+    mask = jnp.asarray(np.arange(n_max)[None, :] < sizes[:, None])
+    prob = WirelessFLProblem(
+        fading=fading,
+        **stacked,
+        **{f: getattr(ref, f) for f in _STATIC_FIELDS},
+    )
+    return ProblemBatch(problem=prob, mask=mask,
+                        fleet_sizes=jnp.asarray(sizes))
+
+
+# --------------------------------------------------------------- sharding
+
+def batch_sharding(batch_size: int,
+                   mesh: Optional[jax.sharding.Mesh] = None
+                   ) -> Optional[jax.sharding.NamedSharding]:
+    """NamedSharding that splits the batch axis over the local devices.
+
+    A user-supplied ``mesh`` may use any axis naming; the batch axis is
+    split along the mesh's *first* axis.  Returns None when sharding is a
+    no-op (single device) or impossible (batch not divisible by the device
+    count — jax requires equal shards).
+    """
+    if mesh is None:
+        devices = jax.devices()
+        if len(devices) <= 1:
+            return None
+        mesh = jax.sharding.Mesh(np.array(devices), ("batch",))
+    axis = mesh.axis_names[0]
+    n_shards = mesh.shape[axis]
+    if n_shards <= 1 or batch_size % n_shards != 0:
+        return None
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
+
+
+def shard_batch(batch: ProblemBatch,
+                mesh: Optional[jax.sharding.Mesh] = None) -> ProblemBatch:
+    """Place every leaf of the batch with its batch axis split over devices."""
+    sharding = batch_sharding(batch.batch_size, mesh)
+    if sharding is None:
+        return batch
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sharding), batch)
+
+
+# ----------------------------------------------------------------- solver
+
+def _mask_solution(sol: JointSolution, mask: jax.Array) -> BatchSolution:
+    m = mask if sol.a.ndim == mask.ndim else mask[..., None]
+    return BatchSolution(a=jnp.where(m, sol.a, 0.0),
+                         power=jnp.where(m, sol.power, 0.0),
+                         objective=sol.objective, n_iters=sol.n_iters,
+                         converged=sol.converged, mask=mask)
+
+
+@partial(jax.jit, static_argnames=("method", "power_solver",
+                                   "faithful_eq13_typo", "max_iters"))
+def _solve_batch_vmapped(batch: ProblemBatch, method: str, power_solver: str,
+                         faithful_eq13_typo: bool, eps: float,
+                         max_iters: int) -> BatchSolution:
+    if method == "optimal":
+        solve = solve_joint_optimal
+    else:
+        solve = partial(solve_joint, eps=eps, max_iters=max_iters,
+                        power_solver=power_solver,
+                        faithful_eq13_typo=faithful_eq13_typo)
+    sol = jax.vmap(solve)(batch.problem)
+    return _mask_solution(sol, batch.mask)
+
+
+def solve_joint_batch(batch: ProblemBatch,
+                      *,
+                      method: str = "alternating",
+                      power_solver: str = "dinkelbach",
+                      faithful_eq13_typo: bool = False,
+                      eps: float = 1e-7,
+                      max_iters: int = 50,
+                      shard: bool = True,
+                      mesh: Optional[jax.sharding.Mesh] = None,
+                      interpret: Optional[bool] = None) -> BatchSolution:
+    """Solve every instance of ``batch`` in one jitted, device-sharded call.
+
+    method:
+      * ``"alternating"`` — vmap of Algorithm 2 (``solve_joint``); matches a
+        python loop of per-instance solves to solver tolerance.
+      * ``"optimal"``     — vmap of the exact bisection optimum
+        (``solve_joint_optimal``).
+      * ``"kernel"``      — the Pallas ``selection_solve`` kernel over the
+        flattened ``[B * N_max]`` element set (solves the same bisection
+        problem as ``"optimal"``; ``interpret=True`` runs it off-TPU).
+
+    ``power_solver``, ``faithful_eq13_typo``, ``eps``, and ``max_iters``
+    are Algorithm-2 knobs and apply only to ``"alternating"`` (the other
+    methods compute the exact per-element optimum directly); requesting
+    the eq.-13 typo with them is an error rather than a silent mismatch.
+
+    ``shard=True`` splits the batch axis over the local devices with a
+    ``NamedSharding`` before solving (no-op on a single device).  Padded
+    device slots come back with ``a = power = 0``; per-instance objectives
+    never include them (their objective weight is 0).
+    """
+    if method not in ("alternating", "optimal", "kernel"):
+        raise ValueError(f"unknown method {method!r}")
+    if method != "alternating" and faithful_eq13_typo:
+        raise ValueError(
+            f"faithful_eq13_typo only applies to method='alternating' "
+            f"(Algorithm 2); method={method!r} computes the exact "
+            "per-element optimum and has no eq. (13) step")
+    if shard:
+        batch = shard_batch(batch, mesh)
+    if method == "kernel":
+        from repro.kernels.selection_solve.ops import solve_joint_kernel_batch
+        return solve_joint_kernel_batch(
+            batch, interpret=True if interpret is None else interpret)
+    return _solve_batch_vmapped(batch, method, power_solver,
+                                faithful_eq13_typo, eps, max_iters)

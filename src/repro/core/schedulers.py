@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.alternating import JointSolution, solve_joint
+from repro.core.batch import BatchSolution, ProblemBatch, solve_joint_batch
 from repro.core.optimal import solve_joint_optimal
 from repro.core.problem import WirelessFLProblem
 
@@ -85,6 +86,40 @@ class ProbabilisticScheduler:
     def expected_participants(self, state: SchedulerState) -> jax.Array:
         a = state.a if state.a.ndim == 1 else state.a.mean(axis=1)
         return jnp.sum(a)
+
+    # ---- batched (multi-scenario) path ---------------------------------
+    def solve_batch(self, batch: ProblemBatch, **kw) -> BatchSolution:
+        """One device-sharded solve for a whole ProblemBatch of scenarios.
+
+        Keyword overrides win over the scheduler's configuration, so e.g.
+        ``solve_batch(batch, method="kernel")`` reaches the Pallas fast
+        path.  As with ``solve()``, the Algorithm-2 knobs (power solver,
+        eq.-13 typo flag) only apply to the alternating method.
+        """
+        kw.setdefault("method",
+                      "optimal" if self.solver == "optimal" else "alternating")
+        if kw["method"] == "alternating":
+            kw.setdefault("power_solver", self.power_solver)
+            kw.setdefault("faithful_eq13_typo", self.faithful_eq13_typo)
+        return solve_joint_batch(batch, **kw)
+
+    def precompute_batch(self, batch: ProblemBatch, **kw) -> SchedulerState:
+        """Batched ``precompute``: every array gains a leading batch axis.
+
+        Consume with ``sample_batch`` (or ``jax.vmap(self.sample)`` over
+        split keys).  Padded device slots have a = 0, so they never
+        participate, and aggregation weight 0.
+        """
+        sol = self.solve_batch(batch, **kw)
+        masked_sizes = batch.problem.dataset_size * batch.mask
+        alpha = masked_sizes / masked_sizes.sum(axis=1, keepdims=True)
+        return SchedulerState(a=sol.a, power=sol.power, agg_weights=alpha)
+
+    def sample_batch(self, state: SchedulerState, key: jax.Array,
+                     k: int = 0) -> ParticipationDraw:
+        """Per-instance independent participation draws, shape [B, N]."""
+        keys = jax.random.split(key, state.a.shape[0])
+        return jax.vmap(lambda s, kk: self.sample(s, kk, k))(state, keys)
 
 
 def _round_preserving_count(a: jax.Array) -> jax.Array:

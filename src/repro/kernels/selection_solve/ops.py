@@ -1,6 +1,12 @@
-"""Jit'd public wrapper for the selection_solve kernel: takes a
-WirelessFLProblem, returns a JointSolution (drop-in for
-core.optimal.solve_joint_optimal)."""
+"""Jit'd public wrappers for the selection_solve kernel.
+
+``solve_joint_kernel`` takes one WirelessFLProblem and returns a
+JointSolution (drop-in for ``core.optimal.solve_joint_optimal``).
+``solve_joint_kernel_batch`` takes a ``core.batch.ProblemBatch`` and
+returns a ``BatchSolution`` — the problem (7) element set is separable per
+``(instance, device, round)``, so the whole batch flattens into one tiled
+kernel launch.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -10,9 +16,8 @@ import jax.numpy as jnp
 
 from repro.core.alternating import JointSolution
 from repro.core.problem import WirelessFLProblem
-from repro.kernels.selection_solve.kernel import selection_solve_tiled
 
-_TILE = 128 * 256
+_ROWS_BLK = 256 * 128   # elements per kernel tile: (256, 128) f32
 
 
 def _pack(x, n_pad):
@@ -21,23 +26,61 @@ def _pack(x, n_pad):
     return x.reshape(-1, 128)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def solve_joint_kernel(problem: WirelessFLProblem,
-                       interpret: bool = True) -> JointSolution:
-    pg = problem.path_gain()
-    n = pg.size
-    m128 = -(-n // 128) * 128
-    rows_blk = 256 * 128
-    m_pad = -(-m128 // rows_blk) * rows_blk
-    n_pad = m_pad - n
+def _bcast_rounds(x: jax.Array, like: jax.Array) -> jax.Array:
+    """Broadcast per-device x to per-(device, round) rank of ``like``."""
+    return x if x.ndim == like.ndim else jnp.broadcast_to(
+        x[..., None], like.shape)
 
-    args = [_pack(v, n_pad) for v in
-            (pg, problem.bandwidth_hz, problem.energy_budget_j,
-             problem.compute_energy())]
+
+def _solve_elements(problem: WirelessFLProblem, pg: jax.Array,
+                    interpret: bool) -> tuple[jax.Array, jax.Array]:
+    """Run the kernel over every element of ``pg`` (any shape), returning
+    (a*, P*) with ``pg``'s shape.  Scalar constraint data is broadcast from
+    the problem; per-device vectors are broadcast across rounds."""
+    from repro.kernels.selection_solve.kernel import selection_solve_tiled
+
+    bw = _bcast_rounds(problem.bandwidth_hz, pg)
+    emax = _bcast_rounds(problem.energy_budget_j, pg)
+    ec = _bcast_rounds(problem.compute_energy(), pg)
+
+    n = pg.size
+    m_pad = -(-n // _ROWS_BLK) * _ROWS_BLK
+    n_pad = m_pad - n
+    args = [_pack(v, n_pad) for v in (pg, bw, emax, ec)]
     a, p = selection_solve_tiled(
         *args, s_bits=problem.grad_size_bits, tau=problem.tau_th,
         p_max=problem.p_max, interpret=interpret)
-    a = a.reshape(-1)[:n].reshape(pg.shape)
-    p = p.reshape(-1)[:n].reshape(pg.shape)
+    return (a.reshape(-1)[:n].reshape(pg.shape),
+            p.reshape(-1)[:n].reshape(pg.shape))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def solve_joint_kernel(problem: WirelessFLProblem,
+                       interpret: bool = True) -> JointSolution:
+    a, p = _solve_elements(problem, problem.path_gain(), interpret)
     return JointSolution(a=a, power=p, objective=problem.objective(a),
                          n_iters=jnp.int32(60), converged=jnp.asarray(True))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def solve_joint_kernel_batch(batch, interpret: bool = True):
+    """Pallas fast path for ``core.batch.solve_joint_batch``.
+
+    Flattens the [B, N_max] (or [B, N_max, K]) element set into one tiled
+    ``selection_solve`` launch.  Solves the same per-element bisection
+    problem as ``solve_joint_optimal`` (the paper's Algorithm 2 is a local
+    method; the kernel computes the exact per-element optimum).
+    """
+    from repro.core.batch import _mask_solution
+
+    problem = batch.problem
+    # per-instance rank-sensitive broadcasting lives in path_gain(); vmap it
+    # rather than reimplementing the [B, N, K] case here.
+    pg = jax.vmap(WirelessFLProblem.path_gain)(problem)
+    a, p = _solve_elements(problem, pg, interpret)
+    b = batch.mask.shape[0]
+    sol = JointSolution(a=a, power=p,
+                        objective=jax.vmap(WirelessFLProblem.objective)(problem, a),
+                        n_iters=jnp.full((b,), 60, jnp.int32),
+                        converged=jnp.ones((b,), bool))
+    return _mask_solution(sol, batch.mask)

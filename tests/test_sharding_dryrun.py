@@ -24,7 +24,11 @@ REPO = Path(__file__).resolve().parents[1]
 def _fake_mesh(data=4, model=4):
     """AbstractMesh carries names/sizes without needing real devices."""
     from jax.sharding import AbstractMesh
-    return AbstractMesh((data, model), ("data", "model"))
+    try:
+        return AbstractMesh((data, model), ("data", "model"))
+    except TypeError:
+        # older jax (<= 0.4.x): AbstractMesh((("data", 4), ("model", 4)))
+        return AbstractMesh((("data", data), ("model", model)))
 
 
 class TestRules:
