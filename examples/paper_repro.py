@@ -3,6 +3,12 @@ selection strategies, accuracy-vs-time curves and Tables I-IV analogues.
 
     PYTHONPATH=src python examples/paper_repro.py            # full (slow)
     PYTHONPATH=src python examples/paper_repro.py --fast     # reduced
+    PYTHONPATH=src python examples/paper_repro.py --engine scan
+        # whole (seed x strategy x scenario) grid as one fused sweep call
+
+``--engine scan`` routes through ``repro.fl.scan_engine``: each
+trajectory is one ``lax.scan``, vmapped across the grid and sharded over
+the local device mesh (see docs/experiments.md).
 """
 import argparse
 import dataclasses
@@ -10,12 +16,15 @@ import json
 from pathlib import Path
 
 from repro.fl.experiments import (HIGH_BIAS, MILD_BIAS, format_tables,
-                                  run_scenario)
+                                  run_grid)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--engine", choices=("loop", "scan"), default="loop",
+                    help="'loop' = reference per-run engine; 'scan' = "
+                         "scan-fused vmapped sweep (one jitted call)")
     ap.add_argument("--out", default="experiments/paper_repro")
     args = ap.parse_args()
 
@@ -27,10 +36,11 @@ def main():
 
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
+    results = run_grid(scenarios, engine=args.engine)
     for spec in scenarios:
         print(f"\n### scenario: {spec.name} (beta={spec.beta}, "
-              f"tau={spec.tau_th}s) ###")
-        result = run_scenario(spec)
+              f"tau={spec.tau_th}s, engine={args.engine}) ###")
+        result = results[spec.name]
         (out_dir / f"{spec.name}.json").write_text(json.dumps(result, indent=1))
         print(format_tables(result, spec))
 

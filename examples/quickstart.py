@@ -5,7 +5,7 @@ short federated training with it.
 """
 import numpy as np
 
-from repro.core import (ProbabilisticScheduler, sample_problem, solve_joint,
+from repro.core import (ProbabilisticScheduler, sample_problem,
                         solve_joint_optimal, solve_joint_trace)
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_mnist_like

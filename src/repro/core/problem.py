@@ -15,7 +15,6 @@ closed forms support unchanged because the problem is separable per
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -76,10 +75,17 @@ class WirelessFLProblem:
         return pg
 
     def rate(self, power: jax.Array) -> jax.Array:
-        """Achievable uplink rate r_ik(P) in bits/s (paper, Sec II-A)."""
-        snr = power * self._pg(power)
-        bw = self.bandwidth_hz if power.ndim == 1 else self.bandwidth_hz[:, None]
-        return bw * jnp.log2(1.0 + snr)
+        """Achievable uplink rate r_ik(P) in bits/s (paper, Sec II-A).
+
+        A 1-d power on a fading ([N, K]) problem broadcasts across rounds:
+        the same transmit power, evaluated at each round's channel draw.
+        """
+        pg = self._pg(power)
+        p = power if power.ndim >= pg.ndim else power[:, None]
+        bw = self.bandwidth_hz
+        if max(p.ndim, pg.ndim) > bw.ndim:
+            bw = bw[:, None]
+        return bw * jnp.log2(1.0 + p * pg)
 
     def tx_time(self, power: jax.Array) -> jax.Array:
         """Transmission time T_ik(P) = S / r_ik(P)  (eq. 1)."""
@@ -91,14 +97,17 @@ class WirelessFLProblem:
 
     def upload_energy(self, power: jax.Array) -> jax.Array:
         """E^u_ik = P T_ik(P)."""
-        return power * self.tx_time(power)
+        t = self.tx_time(power)
+        p = power if power.ndim >= t.ndim else power[:, None]
+        return p * t
 
     def round_energy(self, power: jax.Array) -> jax.Array:
         """E_ik = E^c_i + E^u_ik  (eq. 6)."""
+        eu = self.upload_energy(power)
         ec = self.compute_energy()
-        if power.ndim > 1:
+        if eu.ndim > ec.ndim:
             ec = ec[:, None]
-        return ec + self.upload_energy(power)
+        return ec + eu
 
     def p_min(self, a: jax.Array) -> jax.Array:
         """Minimum power meeting the time constraint (7c) at probability a.

@@ -19,7 +19,7 @@ is a beyond-paper extension) in ``docs/scenarios.md``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -22,7 +22,7 @@ All schedulers are pure-JAX and jit/vmap friendly.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

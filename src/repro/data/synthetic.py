@@ -66,7 +66,8 @@ def make_dataset(n: int, seed: int = 0) -> Dataset:
     """n samples with uniform labels."""
     rng = np.random.default_rng(seed)
     labels = rng.integers(0, 10, size=n).astype(np.int32)
-    images = np.stack([_render(int(l), rng) for l in labels]).astype(np.float32)
+    images = np.stack([_render(int(lab), rng)
+                       for lab in labels]).astype(np.float32)
     return Dataset(images=images[..., None], labels=labels)
 
 

@@ -20,11 +20,17 @@ Two mathematically identical aggregation paths are provided:
 * ``stacked`` — per-client gradients via vmap, then an explicit
   mask-weighted reduction (the ``masked_aggregate`` Pallas kernel's host
   path).  Used to cross-check and to exercise the kernel.
+
+This python-loop engine is the *reference path*: one round per host
+iteration, easy to instrument, easy to extend.  For sweeps (many seeds x
+strategies x scenarios) use ``repro.fl.scan_engine``, which compiles the
+whole trajectory as a ``lax.scan`` and vmaps it across the grid — it is
+validated round-for-round against this engine in ``tests/test_fl_scan.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import functools
 from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
@@ -35,7 +41,6 @@ from repro.core.problem import WirelessFLProblem
 from repro.core.schedulers import ParticipationDraw
 from repro.data.synthetic import Dataset
 from repro.models import cnn
-from repro.optim.optimizers import Optimizer, sgd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +94,9 @@ class FLResult(NamedTuple):
 
 # --------------------------------------------------------------------- steps
 
+@functools.lru_cache(maxsize=16)
 def _make_fused_step(lr: float):
+    """Cached per-lr so repeated ``run_fl`` calls reuse one compilation."""
     @jax.jit
     def step(params, images, labels, sample_weights):
         grads = jax.grad(cnn.loss_fn)(params, images, labels, sample_weights)
@@ -124,10 +131,20 @@ def _quantize_tree(gstack, key: jax.Array, bits: int):
 def _make_stacked_step(lr: float, aggregate_fn: Callable | None = None,
                        uplink_bits: Optional[int] = None):
     if aggregate_fn is None:
-        def aggregate_fn(gstack, coef):   # [N, ...] x [N] -> [...]
-            return jax.tree_util.tree_map(
-                lambda g: jnp.tensordot(coef, g, axes=((0,), (0,))), gstack)
+        return _default_stacked_step(lr, uplink_bits)
+    return _build_stacked_step(lr, aggregate_fn, uplink_bits)
 
+
+@functools.lru_cache(maxsize=16)
+def _default_stacked_step(lr: float, uplink_bits: Optional[int]):
+    def aggregate_fn(gstack, coef):   # [N, ...] x [N] -> [...]
+        return jax.tree_util.tree_map(
+            lambda g: jnp.tensordot(coef, g, axes=((0,), (0,))), gstack)
+    return _build_stacked_step(lr, aggregate_fn, uplink_bits)
+
+
+def _build_stacked_step(lr: float, aggregate_fn: Callable,
+                        uplink_bits: Optional[int]):
     @jax.jit
     def step(params, images, labels, coef, key):
         # images [N, b, ...] -> per-client mean-loss gradients
@@ -160,6 +177,13 @@ def run_fl(problem: WirelessFLProblem,
     params = cnn.init(jax.random.PRNGKey(config.seed + 17)) if init_params is None else init_params
     state = scheduler.precompute(problem)
     ec = np.asarray(problem.compute_energy())
+    # tx-time table at the scheduler's planned powers, computed once — [N],
+    # or [N, K] under per-round fading (draw.power is then the k-th column).
+    # The ParticipationDraw contract allows a scheduler to emit per-round
+    # powers that differ from its precomputed plan; the loop below falls
+    # back to an exact per-round tx_time whenever that happens.
+    state_power = np.asarray(state.power)
+    t_table = np.asarray(problem.tx_time(state.power))
 
     fused = config.aggregate == "fused"
     if config.uplink_bits is not None and fused:
@@ -184,9 +208,13 @@ def run_fl(problem: WirelessFLProblem,
 
         # ---- accounting (paper Sec. V-B) --------------------------------
         if mask.any():
-            t_all = np.asarray(problem.tx_time(jnp.asarray(power)))
-            if power.ndim > 1:
-                t_all = t_all[:, k]
+            planned = state_power if state_power.ndim == 1 else state_power[:, k]
+            if np.array_equal(power, planned):
+                t_all = t_table if t_table.ndim == 1 else t_table[:, k]
+            else:
+                t_all = np.asarray(problem.tx_time(jnp.asarray(power)))
+                if t_all.ndim > 1:      # [N] power on a fading problem
+                    t_all = t_all[:, k]
             sel_t = t_all[mask]
             round_time = float(np.max(sel_t))
             if config.include_compute_time:

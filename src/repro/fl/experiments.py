@@ -9,12 +9,22 @@ seeds (paper: 10).  Accuracy targets are re-anchored to the synthetic
 dataset (DESIGN.md §7): we report time/energy to reach the two targets
 (low/high) analogous to the paper's 59/80% (scenario 1) and 70/86%
 (scenario 2).
+
+Two engines drive the grid (``engine=`` on :func:`run_scenario` /
+:func:`run_grid`):
+
+* ``"loop"`` — the reference python-loop engine, one ``run_fl`` per
+  (strategy, seed);
+* ``"scan"`` — the scan-fused sweep engine: every (strategy x seed)
+  trajectory of the scenario is compiled into ONE jitted, optionally
+  device-sharded call (``repro.fl.scan_engine``), with one scheduler
+  solve per strategy shared across its seeds.  ``run_grid`` additionally
+  fuses *scenarios* into the same call when their shapes agree, realising
+  the full (seed x strategy x scenario) vmap.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-from typing import Optional
 
 import numpy as np
 
@@ -25,6 +35,7 @@ from repro.fl.engine import FLConfig, FLHistory, run_fl
 from repro.core.problem import sample_problem
 
 STRATEGIES = ("probabilistic", "deterministic", "uniform", "equally_weighted")
+_STOCHASTIC = ("probabilistic", "uniform")
 
 
 @dataclasses.dataclass
@@ -69,20 +80,33 @@ def _scheduler(name: str, problem, spec: ScenarioSpec):
     return make_scheduler(name)
 
 
+def _run_config(spec: ScenarioSpec, seed0: int, run: int) -> FLConfig:
+    return FLConfig(n_rounds=spec.n_rounds, lr=spec.lr,
+                    batch_per_client=spec.batch_per_client,
+                    eval_every=spec.eval_every, seed=seed0 + 101 * run)
+
+
 def run_scenario(spec: ScenarioSpec, seed0: int = 0,
-                 strategies=STRATEGIES, verbose: bool = True) -> dict:
-    """Returns {strategy: {"curves": [...], "table": {...}}}."""
+                 strategies=STRATEGIES, verbose: bool = True,
+                 engine: str = "loop") -> dict:
+    """Returns {strategy: {"curves": [...], "table": {...}}}.
+
+    ``engine="scan"`` runs the whole (strategy x seed) grid as one
+    compiled sweep call; ``engine="loop"`` is the per-run reference path.
+    """
+    if engine == "scan":
+        return _run_scenario_scan(spec, seed0, strategies, verbose)
+    if engine != "loop":
+        raise ValueError(f"unknown engine {engine!r}; use 'loop' or 'scan'")
     out: dict = {"spec": dataclasses.asdict(spec), "strategies": {}}
     for strat in strategies:
         runs = []
-        stochastic = strat in ("probabilistic", "uniform")
+        stochastic = strat in _STOCHASTIC
         n_runs = spec.n_runs if stochastic else 1
         for r in range(n_runs):
             problem, train, parts, test = _make_problem_and_data(spec, seed0)
             sch = _scheduler(strat, problem, spec)
-            cfg = FLConfig(n_rounds=spec.n_rounds, lr=spec.lr,
-                           batch_per_client=spec.batch_per_client,
-                           eval_every=spec.eval_every, seed=seed0 + 101 * r)
+            cfg = _run_config(spec, seed0, r)
             res = run_fl(problem, sch, train, parts, test, cfg)
             runs.append(res.history)
             if verbose:
@@ -92,6 +116,111 @@ def run_scenario(spec: ScenarioSpec, seed0: int = 0,
                       f"time={h.sim_time[-1]:.0f}s "
                       f"energy={h.energy[-1]:.0f}J", flush=True)
         out["strategies"][strat] = _summarise(runs, spec.targets)
+    return out
+
+
+# ------------------------------------------------- scan-fused sweep engine
+
+def build_scenario_plans(spec: ScenarioSpec, seed0: int = 0,
+                         strategies=STRATEGIES, dataset_id: int = 0):
+    """The scenario's full (strategy x seed) grid as trajectory plans.
+
+    One scheduler solve per strategy, shared across its seeds.  Returns
+    ``(plans, labels, configs, train, test)`` where ``labels[t]`` names
+    trajectory ``t``'s strategy.
+    """
+    from repro.fl.scan_engine import plan_trajectory
+
+    problem, train, parts, test = _make_problem_and_data(spec, seed0)
+    plans, labels, configs = [], [], []
+    for strat in strategies:
+        sch = _scheduler(strat, problem, spec)
+        state = sch.precompute(problem)
+        n_runs = spec.n_runs if strat in _STOCHASTIC else 1
+        for r in range(n_runs):
+            cfg = _run_config(spec, seed0, r)
+            plans.append(plan_trajectory(problem, sch, parts, cfg,
+                                         state=state, dataset_id=dataset_id))
+            labels.append(strat)
+            configs.append(cfg)
+    return plans, labels, configs, train, test
+
+
+def _group_summaries(histories, labels, targets, spec_name, verbose) -> dict:
+    out: dict = {}
+    for strat in dict.fromkeys(labels):
+        runs = [h for h, s in zip(histories, labels) if s == strat]
+        if verbose:
+            for r, h in enumerate(runs):
+                print(f"  {spec_name}/{strat} run{r}: "
+                      f"final_acc={h.eval_acc[-1]:.3f} "
+                      f"time={h.sim_time[-1]:.0f}s "
+                      f"energy={h.energy[-1]:.0f}J", flush=True)
+        out[strat] = _summarise(runs, targets)
+    return out
+
+
+def _run_scenario_scan(spec: ScenarioSpec, seed0, strategies, verbose) -> dict:
+    from repro.fl.scan_engine import (init_sweep_params, run_fl_sweep,
+                                      stack_plans)
+
+    plans, labels, configs, train, test = build_scenario_plans(
+        spec, seed0, strategies)
+    sweep = run_fl_sweep(stack_plans(plans), train, test, configs[0],
+                         init_sweep_params(configs))
+    out: dict = {"spec": dataclasses.asdict(spec), "engine": "scan",
+                 "strategies": _group_summaries(sweep.histories, labels,
+                                                spec.targets, spec.name,
+                                                verbose)}
+    return out
+
+
+def _scan_compatible(specs) -> bool:
+    keys = [(s.n_rounds, s.eval_every, s.batch_per_client, s.n_devices,
+             s.n_train, s.n_test) for s in specs]
+    return all(k == keys[0] for k in keys)
+
+
+def run_grid(specs, seed0: int = 0, strategies=STRATEGIES,
+             verbose: bool = True, engine: str = "scan") -> dict:
+    """The full (seed x strategy x scenario) grid, scenario-keyed results.
+
+    With ``engine="scan"`` and shape-compatible specs (same rounds /
+    fleet / dataset sizes — the paper's two scenarios qualify) every
+    trajectory of every scenario becomes one row of a single vmapped,
+    jitted sweep call; incompatible specs fall back to one call per
+    scenario.  ``engine="loop"`` runs the reference engine throughout.
+    """
+    if engine == "loop" or (engine == "scan" and not _scan_compatible(specs)):
+        return {spec.name: run_scenario(spec, seed0, strategies, verbose,
+                                        engine=engine)
+                for spec in specs}
+    if engine != "scan":
+        raise ValueError(f"unknown engine {engine!r}; use 'loop' or 'scan'")
+
+    from repro.fl.scan_engine import (init_sweep_params, run_fl_sweep,
+                                      stack_plans)
+
+    plans, labels, configs, trains, tests, spans = [], [], [], [], [], []
+    for i, spec in enumerate(specs):
+        p, lab, cfg, train, test = build_scenario_plans(
+            spec, seed0, strategies, dataset_id=i)
+        spans.append((len(plans), len(plans) + len(p)))
+        plans += p
+        labels += lab
+        configs += cfg
+        trains.append(train)
+        tests.append(test)
+
+    sweep = run_fl_sweep(stack_plans(plans), trains, tests, configs[0],
+                         init_sweep_params(configs))
+    out = {}
+    for spec, (lo, hi) in zip(specs, spans):
+        out[spec.name] = {
+            "spec": dataclasses.asdict(spec), "engine": "scan",
+            "strategies": _group_summaries(sweep.histories[lo:hi],
+                                           labels[lo:hi], spec.targets,
+                                           spec.name, verbose)}
     return out
 
 
@@ -129,9 +258,11 @@ def format_tables(result: dict, spec: ScenarioSpec) -> str:
              f"{'I-II' if spec.beta < 0.2 else 'III-IV'} analogue ==="]
     hdr = f"{'strategy':20s} {'t@lo (s)':>10} {'t@hi (s)':>10} {'E@lo (J)':>10} {'E@hi (J)':>10}"
     lines.append(hdr)
+    def fmt(v):
+        return "NA".rjust(10) if v is None else f"{v:10.0f}"
+
     for strat, res in result["strategies"].items():
         t = res["table"]
-        fmt = lambda v: "NA".rjust(10) if v is None else f"{v:10.0f}"
         lines.append(f"{strat:20s} {fmt(t['time_to_low'])} {fmt(t['time_to_high'])} "
                      f"{fmt(t['energy_to_low'])} {fmt(t['energy_to_high'])}")
     return "\n".join(lines)

@@ -15,8 +15,14 @@ from repro.kernels.masked_aggregate.kernel import (
 
 @partial(jax.jit, static_argnames=("interpret",))
 def masked_aggregate(gstack: jax.Array, coef: jax.Array,
-                     interpret: bool = True) -> jax.Array:
-    """gstack [N, ...] -> [...] (leading client axis reduced)."""
+                     interpret: bool | None = None) -> jax.Array:
+    """gstack [N, ...] -> [...] (leading client axis reduced).
+
+    ``interpret=None`` auto-selects: the compiled Pallas kernel on TPU,
+    interpret mode (functional check) everywhere else.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = gstack.shape[0]
     lead_shape = gstack.shape[1:]
     d = int(np.prod(lead_shape))
@@ -29,7 +35,7 @@ def masked_aggregate(gstack: jax.Array, coef: jax.Array,
     return out[:d].reshape(lead_shape)
 
 
-def masked_aggregate_pytree(gstack_tree, coef, interpret: bool = True):
+def masked_aggregate_pytree(gstack_tree, coef, interpret: bool | None = None):
     return jax.tree_util.tree_map(
         lambda g: masked_aggregate(g, coef, interpret=interpret).astype(g.dtype),
         gstack_tree)

@@ -30,15 +30,32 @@ def init(key: jax.Array) -> dict:
 
 
 def _conv(x, w, b):
-    y = jax.lax.conv_general_dilated(
-        x, w, window_strides=(1, 1), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    """3x3 SAME conv as an im2col matmul.
+
+    Forward-identical to ``lax.conv_general_dilated`` (same contraction,
+    same padding) but lowers to a plain dot, whose backward pass is two
+    matmuls — XLA:CPU's conv/correlation gradient kernels are ~10x slower
+    than its GEMMs at these shapes, and the FL engines take this gradient
+    every round for every client cohort.
+    """
+    kh, kw, cin, cout = w.shape
+    h, wd = x.shape[1], x.shape[2]
+    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
+    patches = jnp.stack([xp[:, i:i + h, j:j + wd, :]
+                         for i in range(kh) for j in range(kw)], axis=3)
+    flat = patches.reshape(x.shape[0], h, wd, kh * kw * cin)
+    y = flat @ w.reshape(kh * kw * cin, cout)
     return y + b
 
 
 def _pool(x):
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    """2x2/stride-2 max pool via reshape (dims are even: 28 -> 14 -> 7).
+
+    Equivalent to ``reduce_window(max)`` but avoids its select-and-scatter
+    gradient, the single slowest op of the round step on XLA:CPU.
+    """
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
 
 def apply(params: dict, images: jax.Array) -> jax.Array:

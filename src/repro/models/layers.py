@@ -21,13 +21,10 @@ Everything lowers under pjit with sharded inputs.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import AttnConfig
 

@@ -26,9 +26,7 @@ masked to -inf at decode and ignored by the loss (labels < vocab).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,9 +8,7 @@ FedSGD server sum *is* the data-parallel gradient reduction.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

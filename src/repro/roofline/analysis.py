@@ -27,7 +27,6 @@ Caveats (measured, see EXPERIMENTS.md §Roofline):
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Optional
 
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16

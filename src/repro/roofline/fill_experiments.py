@@ -27,7 +27,8 @@ def repro_tables() -> dict[str, str]:
                  "|---|---|---|---|---|---|---|"]
         for strat, r in res["strategies"].items():
             t = r["table"]
-            f2 = lambda v: "NA" if v is None else f"{v:.0f}"
+            def f2(v):
+                return "NA" if v is None else f"{v:.0f}"
             lines.append(
                 f"| {strat} | {r['final_acc']:.3f} "
                 f"| {r['mean_participants']:.2f} | {f2(t['time_to_low'])} "

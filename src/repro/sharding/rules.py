@@ -24,10 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 

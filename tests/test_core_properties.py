@@ -7,7 +7,6 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    WirelessFLProblem,
     optimal_selection,
     sample_problem,
     solve_joint,

@@ -5,8 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    ProbabilisticScheduler,
-    WirelessFLProblem,
     analytic_power,
     dinkelbach_power,
     optimal_selection,

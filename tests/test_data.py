@@ -1,6 +1,5 @@
 """Dataset + Dirichlet partitioner tests."""
 import numpy as np
-import pytest
 
 from repro.data.partition import dirichlet_partition, heterogeneity_index, label_distribution
 from repro.data.synthetic import make_dataset, make_mnist_like

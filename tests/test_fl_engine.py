@@ -1,7 +1,5 @@
 """FL round-engine tests: aggregation-path equivalence, accounting
 invariants, and end-to-end learning."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +9,6 @@ from repro.core import ProbabilisticScheduler, make_scheduler, sample_problem
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_mnist_like
 from repro.fl.engine import FLConfig, run_fl
-from repro.models import cnn
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,182 @@
+"""Scan-fused sweep engine vs the python-loop reference (Algorithm 3).
+
+The scanned trajectory must reproduce ``run_fl`` — same participation
+stream, same minibatch stream, same eq.-4 update, same time/energy
+accounting — across aggregation modes, renormalisation settings,
+strategies, and a fading scenario from the registry.
+
+Parameter comparisons use short horizons: the two engines compile the
+round step differently, so ulp-level rounding differences can be
+amplified through ReLU sign flips over long runs; the accounting
+(time/energy/participants) is independent of the model state and stays
+exact at any horizon.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ProbabilisticScheduler, make_scheduler, sample_problem
+from repro.core.scenarios import make_batch, make_problem
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_mnist_like
+from repro.fl.engine import FLConfig, run_fl
+from repro.fl.scan_engine import (init_sweep_params, plan_trajectory,
+                                  plans_from_batch, run_fl_scan, run_fl_sweep,
+                                  stack_plans)
+
+N_DEV = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    train, test = make_mnist_like(900, 200, seed=0)
+    parts = dirichlet_partition(train, N_DEV, beta=0.3, seed=1)
+    sizes = np.array([len(p) for p in parts])
+    prob = sample_problem(0, N_DEV, tau_th=0.5, dirichlet_sizes=sizes)
+    return prob, train, parts, test
+
+
+def assert_matches(ref, scan, *, param_tol=1e-5):
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(scan.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=param_tol, atol=param_tol)
+    hr, hs = ref.history, scan.history
+    np.testing.assert_allclose(hr.sim_time, hs.sim_time, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(hr.energy, hs.energy, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(hr.participants, hs.participants)
+    np.testing.assert_array_equal(hr.rounds, hs.rounds)
+    np.testing.assert_array_equal(hr.eval_rounds, hs.eval_rounds)
+    np.testing.assert_allclose(hr.eval_time, hs.eval_time, rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(hr.eval_acc, hs.eval_acc, atol=0.02)
+
+
+@pytest.mark.parametrize("aggregate", ["fused", "stacked"])
+def test_scan_matches_loop_aggregation_modes(setup, aggregate):
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=15, eval_every=5, batch_per_client=4,
+                   aggregate=aggregate, seed=11)
+    sch = ProbabilisticScheduler()
+    ref = run_fl(prob, sch, train, parts, test, cfg)
+    scan = run_fl_scan(prob, sch, train, parts, test, cfg)
+    assert_matches(ref, scan)
+
+
+@pytest.mark.parametrize("renormalize", [True, False])
+def test_scan_matches_loop_renormalize(setup, renormalize):
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=12, eval_every=6, batch_per_client=4,
+                   renormalize=renormalize, seed=3)
+    sch = ProbabilisticScheduler()
+    assert_matches(run_fl(prob, sch, train, parts, test, cfg),
+                   run_fl_scan(prob, sch, train, parts, test, cfg))
+
+
+@pytest.mark.parametrize("strategy", ["deterministic", "uniform",
+                                      "equally_weighted"])
+def test_scan_matches_loop_strategies(setup, strategy):
+    prob, train, parts, test = setup
+    sch = (make_scheduler(strategy, m=5) if strategy == "uniform"
+           else make_scheduler(strategy))
+    cfg = FLConfig(n_rounds=12, eval_every=6, batch_per_client=4, seed=5)
+    assert_matches(run_fl(prob, sch, train, parts, test, cfg),
+                   run_fl_scan(prob, sch, train, parts, test, cfg))
+
+
+def test_scan_matches_loop_fading_registry(setup):
+    """Rayleigh fading from the scenario registry: per-round powers and
+    tx-times ([N, K] tables) flow through both engines identically."""
+    _, train, parts, test = setup
+    sizes = np.array([len(p) for p in parts])
+    prob = make_problem("rayleigh_fading", seed=2, n_devices=N_DEV,
+                        n_rounds=12, dirichlet_sizes=sizes)
+    cfg = FLConfig(n_rounds=12, eval_every=4, batch_per_client=4, seed=7)
+    sch = ProbabilisticScheduler()
+    ref = run_fl(prob, sch, train, parts, test, cfg)
+    scan = run_fl_scan(prob, sch, train, parts, test, cfg)
+    assert_matches(ref, scan)
+    # fading must actually vary the per-round accounting
+    rt = np.diff(ref.history.sim_time)
+    active = rt[rt > 0]
+    assert len(np.unique(np.round(active, 9))) > 1
+
+
+def test_scan_kernel_aggregation(setup):
+    """masked_aggregate Pallas kernel as the stacked reduction inside the
+    scan agrees with the tensordot reference path."""
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=8, eval_every=8, batch_per_client=4,
+                   aggregate="stacked", seed=9)
+    sch = ProbabilisticScheduler()
+    ref = run_fl_scan(prob, sch, train, parts, test, cfg)
+    krn = run_fl_scan(prob, sch, train, parts, test, cfg, use_kernel=True,
+                      kernel_interpret=True)
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(krn.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_sweep_grid_matches_individual_runs(setup):
+    """A mixed (strategy x seed) sweep: every vmapped trajectory equals its
+    individually-run loop counterpart."""
+    prob, train, parts, test = setup
+    grid = [(ProbabilisticScheduler(), 0), (ProbabilisticScheduler(), 1),
+            (make_scheduler("deterministic"), 0),
+            (make_scheduler("uniform", m=4), 2)]
+    cfgs = [FLConfig(n_rounds=10, eval_every=5, batch_per_client=2, seed=s)
+            for _, s in grid]
+    plans = [plan_trajectory(prob, sch, parts, cfg)
+             for (sch, _), cfg in zip(grid, cfgs)]
+    sweep = run_fl_sweep(stack_plans(plans), train, test, cfgs[0],
+                         init_sweep_params(cfgs))
+    assert len(sweep.histories) == len(grid)
+    for t, ((sch, _), cfg) in enumerate(zip(grid, cfgs)):
+        ref = run_fl(prob, sch, train, parts, test, cfg)
+        assert_matches(ref, sweep.result(t))
+
+
+def test_plans_from_batch_registry(setup):
+    """PR 1's batched solve (precompute_batch over a ProblemBatch) feeds
+    the sweep: plans from one batched solve match per-instance planning
+    to solver tolerance, and drive a runnable sweep."""
+    _, train, parts, test = setup
+    sizes = np.array([len(p) for p in parts])
+    batch = make_batch("paper_static", n_instances=3, seed=0,
+                       n_devices=N_DEV, dirichlet_sizes=sizes)
+    sch = ProbabilisticScheduler()
+    cfgs = [FLConfig(n_rounds=6, eval_every=6, batch_per_client=2, seed=s)
+            for s in range(3)]
+    batched = plans_from_batch(batch, sch, [parts] * 3, cfgs)
+    for i, problem in enumerate(batch.unstack()):
+        single = plan_trajectory(problem, sch, parts, cfgs[i], dataset_id=i)
+        for field in ("probs", "tx_time", "round_energy", "agg_weights"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(single, field)),
+                np.asarray(getattr(batched[i], field)),
+                rtol=2e-4, atol=1e-6, err_msg=f"instance {i} field {field}")
+    sweep = run_fl_sweep(stack_plans(batched), [train] * 3, [test] * 3,
+                         cfgs[0], init_sweep_params(cfgs))
+    for h in sweep.histories:
+        assert np.all(np.isfinite(h.sim_time))
+        assert 0 <= h.participants.min() and h.participants.max() <= N_DEV
+
+
+def test_sweep_rejects_mismatched_plans(setup):
+    prob, train, parts, test = setup
+    cfg_a = FLConfig(n_rounds=6, eval_every=6, batch_per_client=2, seed=0)
+    cfg_b = FLConfig(n_rounds=8, eval_every=8, batch_per_client=2, seed=0)
+    sch = ProbabilisticScheduler()
+    pa = plan_trajectory(prob, sch, parts, cfg_a)
+    pb = plan_trajectory(prob, sch, parts, cfg_b)
+    with pytest.raises(ValueError):
+        stack_plans([pa, pb])
+
+
+def test_scan_rejects_uplink_quantisation(setup):
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=4, eval_every=4, batch_per_client=2,
+                   aggregate="stacked", uplink_bits=8)
+    with pytest.raises(NotImplementedError):
+        run_fl_scan(prob, ProbabilisticScheduler(), train, parts, test, cfg)

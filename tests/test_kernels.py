@@ -1,6 +1,5 @@
 """Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
 against the pure-jnp oracles in each kernel's ref.py."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

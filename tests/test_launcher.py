@@ -1,5 +1,4 @@
 """End-to-end launcher test: repro.launch.train on a reduced arch."""
-import jax.numpy as jnp
 import pytest
 
 from repro.launch.train import main as train_main

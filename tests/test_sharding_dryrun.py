@@ -16,7 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_arch, get_shape
 from repro.models import transformer as T
-from repro.sharding.rules import MeshAxes, batch_specs, cache_specs, param_specs
+from repro.sharding.rules import batch_specs, cache_specs, param_specs
 
 REPO = Path(__file__).resolve().parents[1]
 
