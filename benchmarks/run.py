@@ -14,6 +14,7 @@ benchmark-regression gate — see ``benchmarks/compare.py``.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import os
@@ -132,6 +133,54 @@ def bench_batch_solver_scaling(full: bool):
         emit(f"batch_solver_loop_b{bsz}", us_loop,
              f"instances_per_sec={ips_loop:.1f} "
              f"batched_speedup={ips_batch / ips_loop:.1f}x")
+
+
+def bench_fused_solver_scaling(full: bool):
+    """Fused single-level solver vs the PR-1 ``solve_joint_batch`` path
+    (vmapped nested-while Algorithm 2) — the tentpole speedup claim.
+
+    Two regimes:
+      * B=64 ensemble of 64-device instances: the vmapped nested loops run
+        every instance to the slowest inner solve; the fused flat loop
+        masks per element.
+      * N=100k single instance (``mega_fleet_100k``): the chunked,
+        element-sharded mega-fleet path on a fixed ``chunk_elements``
+        memory bound.
+    """
+    from repro.core import solve_joint_batch, stack_problems
+    from repro.core.scenarios import make_problem
+
+    n, bsz = 64, 64
+    probs = [make_problem("paper_static", seed=i, n_devices=n)
+             for i in range(bsz)]
+    batch = stack_problems(probs)
+
+    us_base = _timeit(lambda: solve_joint_batch(batch).a, n=5)
+    us_fused = _timeit(lambda: solve_joint_batch(batch, method="fused").a,
+                       n=5)
+    ips_base = bsz / (us_base / 1e6)
+    ips_fused = bsz / (us_fused / 1e6)
+    emit(f"fused_solver_base_b{bsz}", us_base,
+         f"instances_per_sec={ips_base:.1f}")
+    emit(f"fused_solver_fused_b{bsz}", us_fused,
+         f"instances_per_sec={ips_fused:.1f} "
+         f"speedup={us_base / us_fused:.1f}x")
+
+    n_mega = 100_000
+    chunk = 16_384
+    mega = make_problem("mega_fleet_100k", seed=0, n_devices=n_mega)
+    mega_batch = stack_problems([mega])
+    # best-of-5: the 100k vmapped solve is ~20 ms and scheduler-noise on a
+    # busy runner is easily +50%, which would flake the 25% absolute gate
+    us_base_m = _timeit(lambda: solve_joint_batch(mega_batch).a, n=5)
+    us_fused_m = _timeit(
+        lambda: solve_joint_batch(mega_batch, method="fused",
+                                  chunk_elements=chunk).a, n=5)
+    emit(f"fused_solver_base_n{n_mega}", us_base_m,
+         f"devices_per_sec={n_mega / (us_base_m / 1e6):.0f}")
+    emit(f"fused_solver_fused_n{n_mega}", us_fused_m,
+         f"devices_per_sec={n_mega / (us_fused_m / 1e6):.0f} "
+         f"chunk_elements={chunk} speedup={us_base_m / us_fused_m:.1f}x")
 
 
 def bench_dinkelbach(full: bool):
@@ -296,6 +345,7 @@ BENCHES = {
     "paper_tables": bench_paper_tables,
     "solver_scaling": bench_solver_scaling,
     "batch_solver_scaling": bench_batch_solver_scaling,
+    "fused_solver_scaling": bench_fused_solver_scaling,
     "dinkelbach": bench_dinkelbach,
     "kernels": bench_kernels,
     "fl_round": bench_fl_round,
@@ -328,6 +378,9 @@ def main(argv=None) -> None:
                          f"(choices: {', '.join(sorted(BENCHES))})")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + metadata as JSON (CI gate input)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the timed region in jax.profiler.trace(DIR) "
+                         "(TensorBoard/Perfetto trace of every bench run)")
     ap.add_argument("--host-devices", type=int, default=0, metavar="N",
                     help="force N virtual host (CPU) devices so the sharded "
                          "paths exercise a multi-device mesh; must be set "
@@ -345,9 +398,14 @@ def main(argv=None) -> None:
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; choices: {sorted(BENCHES)}")
     print("name,us_per_call,derived")
-    for name in names:
-        print(f"# --- {name} ---", flush=True)
-        BENCHES[name](args.full)
+    profile = (jax.profiler.trace(args.profile) if args.profile
+               else contextlib.nullcontext())
+    with profile:
+        for name in names:
+            print(f"# --- {name} ---", flush=True)
+            BENCHES[name](args.full)
+    if args.profile:
+        print(f"# profiler trace written to {args.profile}")
     if args.json:
         _write_json(args.json, args)
 

@@ -1,9 +1,19 @@
 """Core library: the paper's joint probabilistic client selection and
 power allocation for federated learning (Marnissi et al., 2024)."""
-from repro.core.alternating import JointSolution, solve_joint, solve_joint_trace
+from repro.core.alternating import (
+    FleetElements,
+    JointSolution,
+    fused_fixed_point,
+    fused_fixed_point_flat,
+    problem_elements,
+    solve_joint,
+    solve_joint_fused,
+    solve_joint_trace,
+)
 from repro.core.batch import (
     BatchSolution,
     ProblemBatch,
+    batch_elements,
     shard_batch,
     solve_joint_batch,
     stack_problems,
@@ -33,11 +43,13 @@ from repro.core.selection import optimal_selection
 __all__ = [
     "WirelessFLProblem", "sample_problem",
     "ProblemBatch", "BatchSolution", "stack_problems", "shard_batch",
-    "solve_joint_batch",
+    "solve_joint_batch", "batch_elements",
     "Scenario", "SCENARIOS", "make_problem", "make_batch", "make_mixed_batch",
     "PowerSolution", "dinkelbach_power", "analytic_power", "energy_bound_ok",
     "optimal_selection",
     "JointSolution", "solve_joint", "solve_joint_trace", "solve_joint_optimal",
+    "solve_joint_fused", "FleetElements", "problem_elements",
+    "fused_fixed_point", "fused_fixed_point_flat",
     "ParticipationDraw", "SchedulerState",
     "ProbabilisticScheduler", "DeterministicScheduler", "UniformScheduler",
     "EquallyWeightedScheduler", "SCHEDULERS", "make_scheduler",

@@ -1,31 +1,67 @@
 """Algorithm 2: alternating optimisation of (7).
 
 repeat:
-    P^{n+1}  <- Dinkelbach(problem, a^n)          (Algorithm 1, batched)
+    P^{n+1}  <- power update (Algorithm 1 / closed form) at a^n
     if objective (9a) bounded by H (eq. 10):      (feasibility gate, line 4)
         a^{n+1} <- closed form (13)
-until |obj^{n+1} - obj^n| < eps
+until converged
 
 The objective is monotone non-decreasing and bounded by sum(w) = 1, so the
 loop converges to a local optimum (paper, Sec. IV-B).  Elements whose
 energy gate fails keep their previous a (the paper "breaks"; per-element
 freezing is the batched equivalent and can only do better).
 
-Two implementations:
-  * ``solve_joint``       — jit-friendly ``lax.while_loop`` fleet solve.
-  * ``solve_joint_trace`` — python loop that records the objective path
-                            (used by the convergence benchmark/tests).
+Three implementations:
+
+* ``solve_joint``       — the paper-shaped solve: a ``lax.while_loop``
+                          whose stopping rule is the *global* objective
+                          delta, with the power subproblem solved by
+                          Dinkelbach's inner ``while_loop`` by default.
+* ``solve_joint_trace`` — python loop recording the objective path.  It
+                          runs exactly the same ``_alternating_step`` and
+                          the same f32 stopping predicate ``_converged``
+                          as ``solve_joint``, so both count iterations
+                          identically (no off-by-one: both perform at most
+                          ``max_iters`` steps and ``n_iters`` is the
+                          number of steps actually taken).
+* ``solve_joint_fused`` — the fused single-level solver: one flat,
+                          convergence-masked fixed-point iteration over
+                          the separable (instance, device, round) element
+                          set.  The closed-form ``analytic_power`` update
+                          (the Dinkelbach fixed point, see power.py), the
+                          eq.-10 energy gate and the eq.-13 selection
+                          update run in a single ``lax.while_loop`` body;
+                          there is **no nested loop**, so vmapped/stacked
+                          ensembles never wait on the slowest inner solve.
+                          Stopping is per element (max |Δa| < eps), which
+                          implies the global rule: sum(w) = 1 means
+                          |Δobj| <= max|Δa| < eps.  Supports a
+                          ``chunk_elements`` memory bound and an
+                          element-axis ``NamedSharding`` for mega-fleet
+                          (10^5..10^6 device) solves — see
+                          ``fused_fixed_point_flat``.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+import functools
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.power import PowerSolution, analytic_power, dinkelbach_power, energy_bound_ok
+from repro.core.power import (
+    PowerSolution,
+    analytic_power,
+    analytic_power_elements,
+    dinkelbach_power,
+    dinkelbach_power_elements,
+    element_tx_time,
+    energy_bound_ok,
+    energy_gate_elements,
+)
 from repro.core.problem import WirelessFLProblem
-from repro.core.selection import optimal_selection
+from repro.core.selection import optimal_selection, selection_update_elements
 
 
 class JointSolution(NamedTuple):
@@ -50,6 +86,31 @@ def _solution_shape(problem: WirelessFLProblem, per_round: bool):
     return (n,)
 
 
+# ------------------------------------------------- shared Algorithm-2 step
+
+def _alternating_step(problem: WirelessFLProblem, a: jax.Array,
+                      solver: Callable[..., PowerSolution],
+                      faithful_eq13_typo: bool) -> tuple[jax.Array, jax.Array]:
+    """One Algorithm-2 alternation: power update, eq.-10 gate, eq.-13."""
+    sol = solver(problem, a)
+    ok = energy_bound_ok(problem, a, sol) & sol.feasible
+    a_new = optimal_selection(problem, sol.power,
+                              faithful_eq13_typo=faithful_eq13_typo)
+    # freeze elements whose power subproblem is infeasible / unbounded
+    a_new = jnp.where(ok, a_new, a)
+    return a_new, sol.power
+
+
+def _converged(obj: jax.Array, obj_prev: jax.Array, eps: float) -> jax.Array:
+    """The single stopping predicate both solve_joint paths share.
+
+    Evaluated on-device in the objective's dtype (f32): the python trace
+    loop must not compare float64-upcast copies, or its iteration count
+    can differ from the ``while_loop``'s by one near the threshold.
+    """
+    return jnp.abs(obj - obj_prev) < eps
+
+
 def solve_joint(problem: WirelessFLProblem,
                 *,
                 eps: float = 1e-7,
@@ -60,32 +121,24 @@ def solve_joint(problem: WirelessFLProblem,
     """Run Algorithm 2 to convergence for the whole fleet (jit-compatible)."""
     shape = _solution_shape(problem, per_round)
     a0, p0 = _init_state(problem, shape)
-    solver: Callable[..., PowerSolution] = (
-        analytic_power if power_solver == "analytic" else dinkelbach_power)
-
-    def step(a):
-        sol = solver(problem, a) if power_solver == "analytic" else solver(problem, a)
-        ok = energy_bound_ok(problem, a, sol) & sol.feasible
-        a_new = optimal_selection(problem, sol.power,
-                                  faithful_eq13_typo=faithful_eq13_typo)
-        # freeze elements whose power subproblem is infeasible / unbounded
-        a_new = jnp.where(ok, a_new, a)
-        return a_new, sol.power
+    solver = analytic_power if power_solver == "analytic" else dinkelbach_power
+    step = functools.partial(_alternating_step, solver=solver,
+                             faithful_eq13_typo=faithful_eq13_typo)
 
     def cond(state):
         _, _, obj, obj_prev, it = state
-        return (jnp.abs(obj - obj_prev) >= eps) & (it < max_iters)
+        return ~_converged(obj, obj_prev, eps) & (it < max_iters)
 
     def body(state):
         a, p, obj, _, it = state
-        a_new, p_new = step(a)
+        a_new, p_new = step(problem, a)
         return a_new, p_new, problem.objective(a_new), obj, it + 1
 
-    a1, p1 = step(a0)
+    a1, p1 = step(problem, a0)
     state = (a1, p1, problem.objective(a1), problem.objective(a0), jnp.int32(1))
     a, p, obj, obj_prev, iters = jax.lax.while_loop(cond, body, state)
     return JointSolution(a=a, power=p, objective=obj, n_iters=iters,
-                         converged=jnp.abs(obj - obj_prev) < eps)
+                         converged=_converged(obj, obj_prev, eps))
 
 
 def solve_joint_trace(problem: WirelessFLProblem,
@@ -94,24 +147,299 @@ def solve_joint_trace(problem: WirelessFLProblem,
                       max_iters: int = 50,
                       power_solver: str = "dinkelbach",
                       faithful_eq13_typo: bool = False) -> tuple[JointSolution, list[float]]:
-    """Python-loop variant of Algorithm 2 recording the objective trace."""
+    """Python-loop variant of Algorithm 2 recording the objective trace.
+
+    Shares ``_alternating_step`` and ``_converged`` with ``solve_joint``,
+    so the recorded trace length and ``n_iters`` match the jitted path
+    step for step (the convergence benchmark counts on this).
+    """
     shape = _solution_shape(problem, per_round=True)
     a, p = _init_state(problem, shape)
     solver = analytic_power if power_solver == "analytic" else dinkelbach_power
-    trace = [float(problem.objective(a))]
+    step = functools.partial(_alternating_step, solver=solver,
+                             faithful_eq13_typo=faithful_eq13_typo)
+    obj_prev = problem.objective(a)
+    trace = [float(obj_prev)]
     converged = False
     it = 0
     for it in range(1, max_iters + 1):
-        sol = solver(problem, a)
-        ok = energy_bound_ok(problem, a, sol) & sol.feasible
-        a_new = optimal_selection(problem, sol.power,
-                                  faithful_eq13_typo=faithful_eq13_typo)
-        a = jnp.where(ok, a_new, a)
-        p = sol.power
-        trace.append(float(problem.objective(a)))
-        if abs(trace[-1] - trace[-2]) < eps:
+        a, p = step(problem, a)
+        obj = problem.objective(a)
+        trace.append(float(obj))
+        if bool(_converged(obj, obj_prev, eps)):
             converged = True
             break
+        obj_prev = obj
     res = JointSolution(a=a, power=p, objective=jnp.asarray(trace[-1]),
                         n_iters=jnp.int32(it), converged=jnp.asarray(converged))
     return res, trace
+
+
+# --------------------------------------------- fused single-level solver
+
+class FleetElements(NamedTuple):
+    """Constraint data of the separable (instance, device, round) elements.
+
+    All leaves share one common shape — flat ``[E]``, per-device ``[N]``,
+    per-(device, round) ``[N, K]``, stacked ``[B, N]``/``[B, N, K]``; the
+    solver never looks at the structure, only at elements.
+    """
+
+    pg: jax.Array      # path gain g / (d^2 sigma^2)
+    bw: jax.Array      # bandwidth B_i
+    emax: jax.Array    # per-round energy budget E^max_i
+    ec: jax.Array      # computation energy E^c_i
+
+
+# padding for chunk/shard alignment: zero energy budget self-deselects
+# (a* = 0, P* = 0) without producing NaN/inf in any update — the element
+# analogue of core/batch.py's ``_PAD_VALUES``.
+_ELEMENT_PAD = dict(pg=1.0, bw=1.0, emax=0.0, ec=1.0)
+
+# below this element count, auto-sharding (shard=True without an explicit
+# mesh) stays local: splitting a few thousand f32 elements over devices
+# costs more in per-iteration collectives (the while-loop convergence
+# reduce) than the sharded compute saves.  Element sharding exists for
+# the 10^5..10^6-element mega-fleet regime.
+_MIN_SHARD_ELEMENTS = 32_768
+
+
+def problem_elements(problem: WirelessFLProblem,
+                     per_round: bool = True) -> FleetElements:
+    """Broadcast one problem's constraint data to the element set."""
+    shape = _solution_shape(problem, per_round)
+
+    def b(x):
+        return jnp.broadcast_to(x[:, None] if x.ndim < len(shape) else x,
+                                shape)
+
+    return FleetElements(pg=b(problem.path_gain()),
+                         bw=b(problem.bandwidth_hz),
+                         emax=b(problem.energy_budget_j),
+                         ec=b(problem.compute_energy()))
+
+
+def _fused_step(a: jax.Array, el: FleetElements, *, s_bits: float,
+                tau: float, p_max: float, power_solver: str,
+                faithful_eq13_typo: bool) -> tuple[jax.Array, jax.Array]:
+    """One fused alternation on raw elements: power + gate + eq. 13.
+
+    With ``power_solver="analytic"`` (default) this is straight-line
+    element-wise code — the whole Algorithm-2 body with no inner loop.
+    ``"dinkelbach"`` is the faithful reference mode and re-introduces the
+    inner Algorithm-1 iteration (slow; for agreement checks only).
+    """
+    if power_solver == "analytic":
+        p, lam, feasible = analytic_power_elements(
+            a, el.pg, el.bw, s_bits=s_bits, tau=tau, p_max=p_max)
+    elif power_solver == "dinkelbach":
+        p, lam, _, feasible = dinkelbach_power_elements(
+            a, el.pg, el.bw, s_bits=s_bits, tau=tau, p_max=p_max)
+    else:
+        raise ValueError(f"unknown power_solver {power_solver!r}")
+    ok = energy_gate_elements(a, lam, el.emax, el.ec) & feasible
+    t = element_tx_time(p, el.pg, el.bw, s_bits=s_bits)
+    a_new = selection_update_elements(p, t, el.emax, el.ec, tau=tau,
+                                      s_bits=s_bits,
+                                      faithful_eq13_typo=faithful_eq13_typo)
+    return jnp.where(ok, a_new, a), p
+
+
+def fused_init(el: FleetElements, *, s_bits: float, tau: float,
+               p_max: float, faithful_eq13_typo: bool = False
+               ) -> tuple[jax.Array, jax.Array]:
+    """Feasible (a^0, P^0) on raw elements: transmit at P^max, a^0 from
+    eq. (13) — the element form of ``_init_state``.  Shared with the
+    Pallas kernel so the two paths cannot drift."""
+    p0 = jnp.full(el.pg.shape, p_max)
+    t0 = element_tx_time(p0, el.pg, el.bw, s_bits=s_bits)
+    a0 = selection_update_elements(p0, t0, el.emax, el.ec, tau=tau,
+                                   s_bits=s_bits,
+                                   faithful_eq13_typo=faithful_eq13_typo)
+    return a0, p0
+
+
+def fused_fixed_point(el: FleetElements, *, s_bits: float, tau: float,
+                      p_max: float, eps: float = 1e-7, max_iters: int = 50,
+                      power_solver: str = "analytic",
+                      faithful_eq13_typo: bool = False
+                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The flat convergence-masked alternating solve.
+
+    One ``lax.while_loop`` over the whole element set; iteration ``n``
+    applies ``_fused_step`` to every element simultaneously and the loop
+    exits when every element's update moved less than ``eps`` (or at
+    ``max_iters`` total steps, counted like ``solve_joint``).  Per-element
+    trajectories are identical to ``solve_joint``'s — the problem is
+    separable, so each element's update depends only on its own ``a`` —
+    only the stopping rule differs (elementwise vs global objective), and
+    the elementwise rule is the stricter of the two.
+
+    Returns ``(a, power, n_iters, converged)`` with ``converged`` a
+    per-element bool.
+    """
+    step = functools.partial(_fused_step, el=el, s_bits=s_bits, tau=tau,
+                             p_max=p_max, power_solver=power_solver,
+                             faithful_eq13_typo=faithful_eq13_typo)
+    a0, _ = fused_init(el, s_bits=s_bits, tau=tau, p_max=p_max,
+                       faithful_eq13_typo=faithful_eq13_typo)
+
+    def cond(state):
+        _, _, delta, it = state
+        return jnp.any(delta >= eps) & (it < max_iters)
+
+    def body(state):
+        a, _, _, it = state
+        a_new, p_new = step(a)
+        return a_new, p_new, jnp.abs(a_new - a), it + 1
+
+    a1, p1 = step(a0)
+    state = (a1, p1, jnp.abs(a1 - a0), jnp.int32(1))
+    a, p, delta, iters = jax.lax.while_loop(cond, body, state)
+    return a, p, iters, delta < eps
+
+
+def element_mesh(mesh: Optional[jax.sharding.Mesh] = None
+                 ) -> Optional[jax.sharding.Mesh]:
+    """Resolve the mesh used to shard the element axis over local devices.
+
+    Returns None when sharding is a no-op (single device).  A
+    user-supplied mesh may use any axis naming; the element axis is split
+    along its *first* axis (matching ``core.batch.batch_sharding``).
+    """
+    if mesh is None:
+        devices = jax.devices()
+        if len(devices) <= 1:
+            return None
+        mesh = jax.sharding.Mesh(np.array(devices), ("elements",))
+    return mesh if mesh.shape[mesh.axis_names[0]] > 1 else None
+
+
+def _pad_elements(el: FleetElements, multiple: int) -> FleetElements:
+    e = el.pg.shape[0]
+    pad = (-e) % multiple
+    if pad == 0:
+        return el
+    return FleetElements(**{
+        f: jnp.pad(getattr(el, f), (0, pad), constant_values=_ELEMENT_PAD[f])
+        for f in _ELEMENT_PAD})
+
+
+def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
+                           p_max: float, eps: float = 1e-7,
+                           max_iters: int = 50,
+                           power_solver: str = "analytic",
+                           faithful_eq13_typo: bool = False,
+                           chunk_elements: Optional[int] = None,
+                           mesh: Optional[jax.sharding.Mesh] = None,
+                           shard: bool = True
+                           ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Chunked, device-sharded driver over a flat ``[E]`` element set.
+
+    * ``chunk_elements`` bounds the working set: the element axis is padded
+      to a whole number of chunks and solved chunk-by-chunk under
+      ``lax.map`` (sequential, compiled once), so peak memory is
+      O(chunk_elements) regardless of fleet size.  ``None`` solves all E
+      elements in one call.
+    * ``shard=True`` lays the element axis (the within-chunk axis when
+      chunking) out across the local device mesh with a ``NamedSharding``
+      — a *device-axis* sharding: a single 100k-device instance spreads
+      over the mesh even at batch size 1.  Chunk sizes are rounded up to
+      the device count so every shard is equal.  Auto-sharding only
+      engages when the per-solve working set — min(E, chunk_elements) —
+      reaches ``_MIN_SHARD_ELEMENTS`` (below that the per-iteration
+      convergence all-reduce costs more than the sharded compute saves);
+      passing an explicit ``mesh`` always shards, regardless of ``shard``
+      and the threshold.
+
+    Returns flat ``(a, power, n_iters, converged)`` of the original
+    length E; padding elements are solved (to a = P = 0) and stripped.
+    """
+    assert el.pg.ndim == 1, "fused_fixed_point_flat takes flat [E] elements"
+    e = el.pg.shape[0]
+    solve = functools.partial(fused_fixed_point, s_bits=s_bits, tau=tau,
+                              p_max=p_max, eps=eps, max_iters=max_iters,
+                              power_solver=power_solver,
+                              faithful_eq13_typo=faithful_eq13_typo)
+    if mesh is not None:
+        shard = True                       # an explicit mesh always shards
+    else:
+        # the while-loop all-reduce is paid per *solve*, so the auto
+        # threshold looks at the per-chunk working set, not the total E
+        working_set = e if chunk_elements is None else min(e, chunk_elements)
+        if working_set < _MIN_SHARD_ELEMENTS:
+            shard = False                  # auto-sharding: stay local
+    mesh = element_mesh(mesh) if shard else None
+    n_shards = 1 if mesh is None else mesh.shape[mesh.axis_names[0]]
+
+    def constrain(arrs, spec):
+        if mesh is None:
+            return arrs
+        ns = jax.sharding.NamedSharding(mesh, spec)
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, ns), arrs)
+
+    if chunk_elements is None:
+        el = constrain(_pad_elements(el, n_shards),
+                       jax.sharding.PartitionSpec(mesh.axis_names[0])
+                       if mesh else None)
+        a, p, iters, conv = solve(el)
+        return a[:e], p[:e], iters, conv[:e]
+
+    chunk = -(-chunk_elements // n_shards) * n_shards
+    el = _pad_elements(el, chunk)
+    n_chunks = el.pg.shape[0] // chunk
+    el = jax.tree_util.tree_map(lambda x: x.reshape(n_chunks, chunk), el)
+    el = constrain(el, jax.sharding.PartitionSpec(None, mesh.axis_names[0])
+                   if mesh else None)
+    a, p, iters, conv = jax.lax.map(solve, el)
+
+    def unflat(x):
+        return x.reshape(-1)[:e]
+
+    return unflat(a), unflat(p), jnp.max(iters), unflat(conv)
+
+
+def solve_joint_fused(problem: WirelessFLProblem,
+                      *,
+                      eps: float = 1e-7,
+                      max_iters: int = 50,
+                      power_solver: str = "analytic",
+                      faithful_eq13_typo: bool = False,
+                      per_round: bool = True,
+                      chunk_elements: Optional[int] = None,
+                      mesh: Optional[jax.sharding.Mesh] = None,
+                      shard: bool = False) -> JointSolution:
+    """Fused single-level Algorithm 2 for one problem (jit-compatible).
+
+    Matches ``solve_joint`` to solver tolerance (tests assert <= 1e-5 on
+    a*, P* and the objective) while running the whole alternation as one
+    flat masked iteration — the mega-fleet path for 10^5+ device
+    instances.  ``chunk_elements``/``mesh``/``shard`` are forwarded to
+    :func:`fused_fixed_point_flat` (they are jit-static arguments).
+
+    Caveat: with ``faithful_eq13_typo=True`` the verbatim formula has no
+    interior fixed point (each sweep contracts a by 1/S), so the
+    per-element rule iterates to the collapsed solution while
+    ``solve_joint``'s global-objective rule stops a couple of sweeps
+    above it; the <= 1e-5 agreement guarantee covers the corrected
+    formula only.
+    """
+    if problem.fading is not None and not per_round:
+        raise ValueError("per_round=False is meaningless with fading: the "
+                         "element set is per (device, round)")
+    el = problem_elements(problem, per_round)
+    shape = el.pg.shape
+    kw = dict(s_bits=problem.grad_size_bits, tau=problem.tau_th,
+              p_max=problem.p_max, eps=eps, max_iters=max_iters,
+              power_solver=power_solver,
+              faithful_eq13_typo=faithful_eq13_typo)
+    if chunk_elements is None and not shard and mesh is None:
+        a, p, iters, conv = fused_fixed_point(el, **kw)
+    else:
+        flat = jax.tree_util.tree_map(lambda x: x.reshape(-1), el)
+        a, p, iters, conv = fused_fixed_point_flat(
+            flat, chunk_elements=chunk_elements, mesh=mesh, shard=shard, **kw)
+        a, p, conv = a.reshape(shape), p.reshape(shape), conv.reshape(shape)
+    return JointSolution(a=a, power=p, objective=problem.objective(a),
+                         n_iters=iters, converged=jnp.all(conv))

@@ -13,10 +13,14 @@ batch:
   device slots are constructed so every solver *self-deselects* them
   (zero energy budget => a* = 0) — no solver change needed.
 * ``stack_problems`` / ``ProblemBatch.unstack`` — build/split the batch.
-* ``solve_joint_batch`` — ``jax.vmap`` of Algorithm 2 (or the exact
-  bisection optimum, or the Pallas ``selection_solve`` kernel fast path)
-  across the batch, jitted once, optionally sharded over the local device
-  mesh with ``jax.sharding.NamedSharding`` along the batch axis.
+* ``solve_joint_batch`` — ``jax.vmap`` of Algorithm 2 (or the fused
+  single-level solver, the exact bisection optimum, or the Pallas
+  ``selection_solve``/``fused_solve`` kernel fast paths) across the
+  batch, jitted once, optionally sharded over the local device mesh with
+  ``jax.sharding.NamedSharding`` along the batch axis — or, for
+  ``method="fused"``, along the flattened *element* axis with an optional
+  ``chunk_elements`` memory bound (the mega-fleet path: a single 100k- or
+  1M-device instance spreads over the mesh and solves in fixed memory).
 
 Static metadata (``p_max``, ``tau_th``, ``grad_size_bits``, ...) is shared
 batch-wide — ``stack_problems`` raises if instances disagree, since those
@@ -35,7 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.alternating import JointSolution, solve_joint
+from repro.core.alternating import (
+    FleetElements,
+    JointSolution,
+    fused_fixed_point_flat,
+    solve_joint,
+)
 from repro.core.optimal import solve_joint_optimal
 from repro.core.problem import WirelessFLProblem
 
@@ -228,49 +237,140 @@ def _solve_batch_vmapped(batch: ProblemBatch, method: str, power_solver: str,
     return _mask_solution(sol, batch.mask)
 
 
+def batch_elements(batch: ProblemBatch) -> FleetElements:
+    """Stacked per-element constraint data, shape [B, N_max] or [B, N_max, K]."""
+    problem = batch.problem
+    # per-instance rank-sensitive broadcasting lives in path_gain(); vmap it
+    # rather than reimplementing the [B, N, K] case here.
+    pg = jax.vmap(WirelessFLProblem.path_gain)(problem)
+
+    def b(x):
+        return jnp.broadcast_to(x[..., None] if x.ndim < pg.ndim else x,
+                                pg.shape)
+
+    return FleetElements(pg=pg, bw=b(problem.bandwidth_hz),
+                         emax=b(problem.energy_budget_j),
+                         ec=b(jax.vmap(WirelessFLProblem.compute_energy)(problem)))
+
+
+@partial(jax.jit, static_argnames=("power_solver", "faithful_eq13_typo",
+                                   "max_iters", "chunk_elements", "mesh",
+                                   "shard"))
+def _solve_batch_fused(batch: ProblemBatch, power_solver: str,
+                       faithful_eq13_typo: bool, eps: float, max_iters: int,
+                       chunk_elements: Optional[int],
+                       mesh: Optional[jax.sharding.Mesh],
+                       shard: bool) -> BatchSolution:
+    """The fused flat path: one convergence-masked iteration over the whole
+    [B * N_max (* K)] element set — no per-instance lockstep, optionally
+    chunked (fixed memory) and sharded along the *element* axis (a single
+    mega-fleet instance spreads over the mesh even at B = 1)."""
+    el = batch_elements(batch)
+    shape = el.pg.shape
+    flat = jax.tree_util.tree_map(lambda x: x.reshape(-1), el)
+    a, p, iters, conv = fused_fixed_point_flat(
+        flat, s_bits=batch.problem.grad_size_bits, tau=batch.problem.tau_th,
+        p_max=batch.problem.p_max, eps=eps, max_iters=max_iters,
+        power_solver=power_solver, faithful_eq13_typo=faithful_eq13_typo,
+        chunk_elements=chunk_elements, mesh=mesh, shard=shard)
+    a, p, conv = a.reshape(shape), p.reshape(shape), conv.reshape(shape)
+    b = shape[0]
+    sol = JointSolution(
+        a=a, power=p,
+        objective=jax.vmap(WirelessFLProblem.objective)(batch.problem, a),
+        n_iters=jnp.broadcast_to(iters, (b,)),
+        converged=conv.reshape(b, -1).all(axis=1))
+    return _mask_solution(sol, batch.mask)
+
+
 def solve_joint_batch(batch: ProblemBatch,
                       *,
                       method: str = "alternating",
-                      power_solver: str = "dinkelbach",
+                      power_solver: Optional[str] = None,
                       faithful_eq13_typo: bool = False,
                       eps: float = 1e-7,
                       max_iters: int = 50,
                       shard: bool = True,
                       mesh: Optional[jax.sharding.Mesh] = None,
+                      chunk_elements: Optional[int] = None,
                       interpret: Optional[bool] = None) -> BatchSolution:
     """Solve every instance of ``batch`` in one jitted, device-sharded call.
 
     method:
-      * ``"alternating"`` — vmap of Algorithm 2 (``solve_joint``); matches a
-        python loop of per-instance solves to solver tolerance.
-      * ``"optimal"``     — vmap of the exact bisection optimum
+      * ``"alternating"``  — vmap of Algorithm 2 (``solve_joint``); matches
+        a python loop of per-instance solves to solver tolerance.
+      * ``"fused"``        — the fused single-level solver
+        (``core.alternating.fused_fixed_point_flat``) over the flattened
+        element set: same fixed point as ``"alternating"`` (agreement
+        <= 1e-5 elementwise) but one flat convergence-masked loop — no
+        nested while-loops, so the batch never waits on the slowest inner
+        solve.  The mega-fleet path: honours ``chunk_elements`` and
+        shards the *element* axis (not just the batch axis).
+      * ``"optimal"``      — vmap of the exact bisection optimum
         (``solve_joint_optimal``).
-      * ``"kernel"``      — the Pallas ``selection_solve`` kernel over the
+      * ``"kernel"``       — the Pallas ``selection_solve`` kernel over the
         flattened ``[B * N_max]`` element set (solves the same bisection
         problem as ``"optimal"``; ``interpret=True`` runs it off-TPU).
+      * ``"fused_kernel"`` — the Pallas ``fused_solve`` kernel: the fused
+        alternating fixed point, whole tiles VMEM-resident
+        (``interpret=True`` runs it off-TPU).
 
-    ``power_solver``, ``faithful_eq13_typo``, ``eps``, and ``max_iters``
-    are Algorithm-2 knobs and apply only to ``"alternating"`` (the other
-    methods compute the exact per-element optimum directly); requesting
-    the eq.-13 typo with them is an error rather than a silent mismatch.
+    ``power_solver`` (default: ``"dinkelbach"`` for ``"alternating"``,
+    ``"analytic"`` — the bit-identical closed form — for the fused
+    methods), ``faithful_eq13_typo``, ``eps``, and ``max_iters`` are
+    Algorithm-2 knobs and apply only to the alternating/fused methods
+    (the other methods compute the exact per-element optimum directly);
+    requesting the eq.-13 typo with them is an error rather than a
+    silent mismatch.  ``"fused_kernel"`` runs ``max_iters`` fixed
+    iterations (no ``eps`` early-exit — the iteration is stationary past
+    its fixed point) and rejects ``power_solver="dinkelbach"``.
 
-    ``shard=True`` splits the batch axis over the local devices with a
-    ``NamedSharding`` before solving (no-op on a single device).  Padded
-    device slots come back with ``a = power = 0``; per-instance objectives
-    never include them (their objective weight is 0).
+    ``shard=True`` splits the batch axis (the element axis for
+    ``"fused"``) over the local devices with a ``NamedSharding`` before
+    solving (no-op on a single device).  ``chunk_elements`` bounds the
+    fused solve's working set to a fixed number of elements regardless of
+    fleet size (only valid with ``method="fused"``).  Padded device slots
+    come back with ``a = power = 0``; per-instance objectives never
+    include them (their objective weight is 0).
     """
-    if method not in ("alternating", "optimal", "kernel"):
+    if method not in ("alternating", "fused", "optimal", "kernel",
+                      "fused_kernel"):
         raise ValueError(f"unknown method {method!r}")
-    if method != "alternating" and faithful_eq13_typo:
+    alg2 = method in ("alternating", "fused", "fused_kernel")
+    if not alg2 and faithful_eq13_typo:
         raise ValueError(
-            f"faithful_eq13_typo only applies to method='alternating' "
-            f"(Algorithm 2); method={method!r} computes the exact "
-            "per-element optimum and has no eq. (13) step")
+            f"faithful_eq13_typo only applies to the Algorithm-2 methods "
+            f"('alternating'/'fused'/'fused_kernel'); method={method!r} "
+            "computes the exact per-element optimum and has no eq. (13) step")
+    if chunk_elements is not None and method != "fused":
+        raise ValueError(
+            f"chunk_elements is a method='fused' memory bound; "
+            f"method={method!r} would silently ignore it")
+    if power_solver is None:
+        power_solver = ("analytic" if method in ("fused", "fused_kernel")
+                        else "dinkelbach")
+    if method == "fused_kernel" and power_solver != "analytic":
+        raise ValueError(
+            f"method='fused_kernel' only implements the analytic "
+            f"(closed-form) power update; power_solver={power_solver!r} "
+            "would be silently ignored — use method='fused' for the "
+            "Dinkelbach reference mode")
+    if method == "fused":
+        return _solve_batch_fused(batch, power_solver, faithful_eq13_typo,
+                                  eps, max_iters, chunk_elements, mesh, shard)
     if shard:
         batch = shard_batch(batch, mesh)
     if method == "kernel":
         from repro.kernels.selection_solve.ops import solve_joint_kernel_batch
         return solve_joint_kernel_batch(
             batch, interpret=True if interpret is None else interpret)
+    if method == "fused_kernel":
+        from repro.kernels.selection_solve.ops import solve_joint_fused_kernel_batch
+        # the kernel runs its full iteration budget unconditionally (fixed
+        # trip count, stationary past the fixed point), so ``eps`` has no
+        # kernel analogue; ``max_iters`` maps onto that budget.
+        return solve_joint_fused_kernel_batch(
+            batch, n_iters=max_iters, faithful_eq13_typo=faithful_eq13_typo,
+            interpret=True if interpret is None else interpret)
     return _solve_batch_vmapped(batch, method, power_solver,
                                 faithful_eq13_typo, eps, max_iters)

@@ -20,6 +20,17 @@ minimiser is the *lower boundary* P = clip(P^min(a), 0, P^max); Dinkelbach
 converges there through the clipping.  ``analytic_power`` exposes that
 shortcut (bit-identical solution, ~30x fewer flops) as a beyond-paper
 solver optimisation; tests assert both agree.
+
+Every update is available in two layers:
+
+* **element level** (``*_elements``): raw ``(a, pg, bw, ...)`` arrays of
+  any common shape — the separable (instance, device, round) element set.
+  These are the single source of truth for the closed forms; the fused
+  flat solver (``core/alternating.py``), the batched engine
+  (``core/batch.py``) and the Pallas kernel oracle all build on them.
+* **problem level** (``dinkelbach_power`` / ``analytic_power``): the
+  original :class:`WirelessFLProblem` API, now thin broadcast shims over
+  the element level (bit-identical to the pre-refactor implementations).
 """
 from __future__ import annotations
 
@@ -40,35 +51,67 @@ class PowerSolution(NamedTuple):
     feasible: jax.Array     # bool, P^min(a) <= P^max elementwise
 
 
-def _energy_objective(problem: WirelessFLProblem, a: jax.Array, power: jax.Array) -> jax.Array:
-    """Objective (9a): a * P * T(P) = a S P / r(P)."""
-    return a * power * problem.tx_time(power)
+# -------------------------------------------------------- element level
+
+def element_p_min(a, pg, bw, *, s_bits: float, tau: float) -> jax.Array:
+    """P^min_ik = (2^{a S / (B tau)} - 1) / pg, exponent-clamped (eq. 7c).
+
+    Mirrors ``WirelessFLProblem.p_min`` on raw element arrays.
+    """
+    exponent = jnp.minimum(a * s_bits / (bw * tau), 120.0)
+    return jnp.expm1(exponent * LN2) / pg
 
 
-def dinkelbach_power(problem: WirelessFLProblem,
-                     a: jax.Array,
-                     *,
-                     lam0: float = 1e-3,
-                     eps: float = 1e-6,
-                     max_iters: int = 64) -> PowerSolution:
-    """Vectorised Algorithm 1 over every (i, k) subproblem simultaneously."""
-    pg = problem._pg(a)
-    bw = problem.bandwidth_hz if a.ndim == 1 else problem.bandwidth_hz[:, None]
-    s_bits = problem.grad_size_bits
+def element_tx_time(power, pg, bw, *, s_bits: float) -> jax.Array:
+    """T_ik(P) = S / r_ik(P) with r = B log2(1 + P pg)  (eq. 1)."""
+    return s_bits / jnp.maximum(bw * jnp.log2(1.0 + power * pg), 1e-30)
+
+
+def _element_lam(a, power, pg, bw, *, s_bits: float) -> jax.Array:
+    """Objective (9a): a P T(P), defined 0 where a = 0 (rate(0) = 0)."""
+    t = element_tx_time(power, pg, bw, s_bits=s_bits)
+    return jnp.where(a > 0, jnp.maximum(a, _A_FLOOR) * power * t, 0.0)
+
+
+def analytic_power_elements(a, pg, bw, *, s_bits: float, tau: float,
+                            p_max: float
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Closed-form optimum of (9) per element: P* = clip(P^min(a), 0, P^max).
+
+    Returns ``(power, lam, feasible)`` with ``lam`` the objective (9a) at
+    the optimum — exactly what Dinkelbach's lambda converges to.
+    """
+    p_min = jnp.clip(element_p_min(a, pg, bw, s_bits=s_bits, tau=tau),
+                     0.0, None)
+    feasible = p_min <= p_max * (1 + 1e-6)
+    p = jnp.minimum(p_min, p_max)
+    return p, _element_lam(a, p, pg, bw, s_bits=s_bits), feasible
+
+
+def dinkelbach_power_elements(a, pg, bw, *, s_bits: float, tau: float,
+                              p_max: float, lam0: float = 1e-3,
+                              eps: float = 1e-6, max_iters: int = 64
+                              ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Vectorised Algorithm 1 over raw element arrays.
+
+    Returns ``(power, lam, n_iters, feasible)``.  Retained as the faithful
+    reference for ``analytic_power_elements`` (which is its fixed point in
+    closed form); the while-loop makes this a *nested* iteration when used
+    inside the fused solver, so it is a reference mode there.
+    """
     a_safe = jnp.maximum(a, _A_FLOOR)
-
-    p_min = jnp.clip(problem.p_min(a), 0.0, None)
-    p_lo = jnp.minimum(p_min, problem.p_max)   # clip box; feasibility reported separately
-    feasible = p_min <= problem.p_max * (1 + 1e-6)
+    p_min = jnp.clip(element_p_min(a, pg, bw, s_bits=s_bits, tau=tau),
+                     0.0, None)
+    p_lo = jnp.minimum(p_min, p_max)   # clip box; feasibility reported separately
+    feasible = p_min <= p_max * (1 + 1e-6)
 
     def p_star(lam):
         p = lam * bw / (a_safe * s_bits * LN2) - 1.0 / pg
-        return jnp.clip(p, p_lo, problem.p_max)
+        return jnp.clip(p, p_lo, p_max)
 
     def lam_of(p):
         # guard P=0 (a=0 rows): rate(0)=0 -> T=inf, but a*P=0; define energy 0.
-        e = _energy_objective(problem, a_safe, p)
-        return jnp.where(a > 0, e, 0.0)
+        return _element_lam(a, p, pg, bw, s_bits=s_bits)
 
     def cond(state):
         _, lam, lam_prev, it, done = state
@@ -90,16 +133,44 @@ def dinkelbach_power(problem: WirelessFLProblem,
     p_init = p_star(lam_init)
     state = (p_init, lam_of(p_init), lam_init, jnp.int32(0), jnp.zeros_like(a, bool))
     p, lam, _, iters, _ = jax.lax.while_loop(cond, body, state)
+    return p, lam, iters, feasible
+
+
+def energy_gate_elements(a, lam, emax, ec) -> jax.Array:
+    """Algorithm 2 line 4: objective (9a) <= H_ik = E^max - a E^c (eq. 10)."""
+    h = emax - a * ec
+    return lam <= h + 1e-9
+
+
+# -------------------------------------------------------- problem level
+
+def _element_operands(problem: WirelessFLProblem, a: jax.Array):
+    pg = problem._pg(a)
+    bw = problem.bandwidth_hz if a.ndim == 1 else problem.bandwidth_hz[:, None]
+    return pg, bw
+
+
+def dinkelbach_power(problem: WirelessFLProblem,
+                     a: jax.Array,
+                     *,
+                     lam0: float = 1e-3,
+                     eps: float = 1e-6,
+                     max_iters: int = 64) -> PowerSolution:
+    """Vectorised Algorithm 1 over every (i, k) subproblem simultaneously."""
+    pg, bw = _element_operands(problem, a)
+    p, lam, iters, feasible = dinkelbach_power_elements(
+        a, pg, bw, s_bits=problem.grad_size_bits, tau=problem.tau_th,
+        p_max=problem.p_max, lam0=lam0, eps=eps, max_iters=max_iters)
     return PowerSolution(power=p, lam=lam, n_iters=iters, feasible=feasible)
 
 
 def analytic_power(problem: WirelessFLProblem, a: jax.Array) -> PowerSolution:
     """Closed-form optimum of (9): the ratio is increasing in P, so
     P* = clip(P^min(a), 0, P^max).  Beyond-paper solver fast path."""
-    p_min = jnp.clip(problem.p_min(a), 0.0, None)
-    feasible = p_min <= problem.p_max * (1 + 1e-6)
-    p = jnp.minimum(p_min, problem.p_max)
-    lam = jnp.where(a > 0, _energy_objective(problem, jnp.maximum(a, _A_FLOOR), p), 0.0)
+    pg, bw = _element_operands(problem, a)
+    p, lam, feasible = analytic_power_elements(
+        a, pg, bw, s_bits=problem.grad_size_bits, tau=problem.tau_th,
+        p_max=problem.p_max)
     return PowerSolution(power=p, lam=lam, n_iters=jnp.int32(0), feasible=feasible)
 
 
@@ -109,5 +180,4 @@ def energy_bound_ok(problem: WirelessFLProblem, a: jax.Array, sol: PowerSolution
     emax = problem.energy_budget_j
     if a.ndim > 1:
         ec, emax = ec[:, None], emax[:, None]
-    h = emax - a * ec
-    return sol.lam <= h + 1e-9
+    return energy_gate_elements(a, sol.lam, emax, ec)

@@ -138,6 +138,36 @@ def _dense_1k(seed, *, n_devices: int = 1000, **kw) -> WirelessFLProblem:
     return sample_problem(seed, n_devices, **kw)
 
 
+@register("mega_fleet_100k",
+          "Mega fleet: 100 000 devices in a 10 km^2 metro area sharing "
+          "1 GHz of OFDMA spectrum; the fused single-level solver's "
+          "chunked, element-sharded path solves it in fixed memory "
+          "(``solve_joint_fused(..., chunk_elements=...)`` or "
+          "``solve_joint_batch(method='fused', chunk_elements=...)``).",
+          "beyond-paper", n_devices=100_000)
+def _mega_fleet_100k(seed, *, n_devices: int = 100_000,
+                     **kw) -> WirelessFLProblem:
+    kw.setdefault("area_m", 3163.0)          # ~10 km^2
+    kw.setdefault("total_bandwidth_hz", 1e9)
+    kw.setdefault("dataset_total", 60_000_000)
+    return sample_problem(seed, n_devices, **kw)
+
+
+@register("metro_1m_users",
+          "Metropolitan scale: 1 000 000 devices over 100 km^2 sharing "
+          "10 GHz — the ROADMAP's million-user regime.  Solve with "
+          "``method='fused'`` and a ``chunk_elements`` bound; anything "
+          "that materialises per-instance intermediates at this size "
+          "belongs on the chunked path.",
+          "beyond-paper", n_devices=1_000_000)
+def _metro_1m_users(seed, *, n_devices: int = 1_000_000,
+                    **kw) -> WirelessFLProblem:
+    kw.setdefault("area_m", 10_000.0)        # 100 km^2
+    kw.setdefault("total_bandwidth_hz", 1e10)
+    kw.setdefault("dataset_total", 600_000_000)
+    return sample_problem(seed, n_devices, **kw)
+
+
 @register("sparse_energy_starved",
           "Sparse IoT fleet: 32 devices over 4 km^2 with per-round energy "
           "budgets log-uniform in [1e-4, 1e-2] J — the energy constraint "

@@ -27,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.alternating import JointSolution, solve_joint
+from repro.core.alternating import JointSolution, solve_joint, solve_joint_fused
 from repro.core.batch import BatchSolution, ProblemBatch, solve_joint_batch
 from repro.core.optimal import solve_joint_optimal
 from repro.core.problem import WirelessFLProblem
@@ -58,7 +58,7 @@ def _data_weights(problem: WirelessFLProblem) -> jax.Array:
 class ProbabilisticScheduler:
     """The paper's joint probabilistic selection + power allocation."""
 
-    solver: str = "alternating"        # "alternating" (paper) | "optimal" (ours)
+    solver: str = "alternating"        # "alternating" (paper) | "fused" | "optimal" (ours)
     power_solver: str = "dinkelbach"   # "dinkelbach" (paper) | "analytic" (fast path)
     unbiased_aggregation: bool = False  # beyond-paper alpha_i / a_i correction
     faithful_eq13_typo: bool = False
@@ -66,6 +66,11 @@ class ProbabilisticScheduler:
     def solve(self, problem: WirelessFLProblem) -> JointSolution:
         if self.solver == "optimal":
             return solve_joint_optimal(problem)
+        if self.solver == "fused":
+            # the fused single-level solver always uses the closed-form
+            # (analytic) power update — it IS the Dinkelbach fixed point
+            return solve_joint_fused(problem,
+                                     faithful_eq13_typo=self.faithful_eq13_typo)
         return solve_joint(problem, power_solver=self.power_solver,
                            faithful_eq13_typo=self.faithful_eq13_typo)
 
@@ -96,10 +101,11 @@ class ProbabilisticScheduler:
         path.  As with ``solve()``, the Algorithm-2 knobs (power solver,
         eq.-13 typo flag) only apply to the alternating method.
         """
-        kw.setdefault("method",
-                      "optimal" if self.solver == "optimal" else "alternating")
+        kw.setdefault("method", self.solver
+                      if self.solver in ("optimal", "fused") else "alternating")
         if kw["method"] == "alternating":
             kw.setdefault("power_solver", self.power_solver)
+        if kw["method"] in ("alternating", "fused", "fused_kernel"):
             kw.setdefault("faithful_eq13_typo", self.faithful_eq13_typo)
         return solve_joint_batch(batch, **kw)
 

@@ -12,6 +12,10 @@ NOTE (paper erratum, DESIGN.md §1): the paper prints the middle term as
 ``tau^th / (S * T_ik)``; the extra S is dimensionally inconsistent with
 (7c) and would violate the paper's own constraint.  The corrected form is
 the default; ``faithful_eq13_typo=True`` reproduces the verbatim formula.
+
+``selection_update_elements`` is the element-level form (raw arrays, any
+common shape) shared by the fused flat solver and the Pallas kernel
+oracle; ``optimal_selection`` is the :class:`WirelessFLProblem` shim.
 """
 from __future__ import annotations
 
@@ -19,6 +23,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.problem import WirelessFLProblem
+
+
+def selection_update_elements(power, tx_time, emax, ec, *, tau: float,
+                              s_bits: float,
+                              faithful_eq13_typo: bool = False) -> jax.Array:
+    """a*_ik per eq. (13) on raw element arrays.
+
+    ``tx_time`` is T_ik(P_ik) evaluated at ``power`` (callers already have
+    it from the power update; passing it avoids a second rate evaluation).
+    """
+    time_term = tau / jnp.maximum(tx_time, 1e-30)
+    if faithful_eq13_typo:
+        time_term = time_term / s_bits
+    energy_term = emax / jnp.maximum(power * tx_time + ec, 1e-30)
+    a = jnp.minimum(jnp.minimum(1.0, time_term), energy_term)
+    # P = 0 (e.g. a collapsed to 0 earlier) transmits nothing: T = inf.
+    a = jnp.where(power > 0, a, 0.0)
+    return jnp.clip(a, 0.0, 1.0)
 
 
 def optimal_selection(problem: WirelessFLProblem,
@@ -31,12 +53,6 @@ def optimal_selection(problem: WirelessFLProblem,
     emax = problem.energy_budget_j
     if power.ndim > 1:
         ec, emax = ec[:, None], emax[:, None]
-
-    time_term = problem.tau_th / jnp.maximum(t, 1e-30)
-    if faithful_eq13_typo:
-        time_term = time_term / problem.grad_size_bits
-    energy_term = emax / jnp.maximum(power * t + ec, 1e-30)
-    a = jnp.minimum(jnp.minimum(1.0, time_term), energy_term)
-    # P = 0 (e.g. a collapsed to 0 earlier) transmits nothing: T = inf.
-    a = jnp.where(power > 0, a, 0.0)
-    return jnp.clip(a, 0.0, 1.0)
+    return selection_update_elements(power, t, emax, ec, tau=problem.tau_th,
+                                     s_bits=problem.grad_size_bits,
+                                     faithful_eq13_typo=faithful_eq13_typo)

@@ -1,22 +1,31 @@
-"""Pallas TPU kernel: fleet-scale joint selection/power solve.
+"""Pallas TPU kernels: fleet-scale joint selection/power solve.
 
-Solves the per-device global optimum of problem (7) (the monotone
-bisection of core/optimal.py) for a *fleet tile at a time*: device state
-(path gain, bandwidth, budgets, compute energy) is streamed HBM -> VMEM in
-(ROWS, 128) blocks and the fixed-iteration bisection runs entirely on the
-VPU — branch-free elementwise ops, no host loop, no re-materialisation of
+Two solvers over the same pre-flattened element tiles:
+
+* ``selection_solve_tiled`` — the per-device *global* optimum of problem
+  (7) (the monotone bisection of core/optimal.py), 60 fixed bisection
+  iterations.
+* ``fused_solve_tiled``     — the paper's Algorithm 2 as the fused
+  single-level alternating fixed point (core/alternating.py
+  ``fused_fixed_point``): closed-form power update, eq.-10 energy gate
+  and eq.-13 selection update per iteration, a fixed ``n_iters``
+  unrolled on the VPU.  Same local optimum as ``solve_joint`` (<= 1e-5
+  elementwise).
+
+Device state (path gain, bandwidth, budgets, compute energy) is streamed
+HBM -> VMEM in (ROWS, 128) blocks and every iterate stays VMEM-resident —
+branch-free elementwise ops, no host loop, no re-materialisation of
 intermediates in HBM.  For planetary-scale FL fleets (10^5-10^7 devices x
 rounds) this is the compute hot-spot of the paper's technique; the pure
-XLA path (ref.py) materialises each bisection iterate in HBM, the kernel
-keeps all 60 iterates VMEM-resident.
+XLA paths materialise each iterate in HBM.
 
 Inputs are pre-flattened [M, 128] tiles (ops.py handles padding/reshape):
     path_gain   g / (d^2 sigma^2)           [M,128] f32
     bandwidth   B_i                         [M,128] f32
     e_max       per-round energy budget     [M,128] f32
     e_comp      E^c_i                       [M,128] f32
-scalars (SMEM): S (bits), tau, p_max.
-Outputs: a* and P* = min-power at a* (clipped), both [M,128] f32.
+scalars (compiled in): S (bits), tau, p_max.
+Outputs: a* and P*, both [M,128] f32.
 """
 from __future__ import annotations
 
@@ -26,10 +35,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.alternating import FleetElements, _fused_step, fused_init
+
 LN2 = 0.6931471805599453
 
 DEFAULT_ROWS = 256      # (256, 128) f32 tile = 128 KiB/operand in VMEM
 N_BISECT = 60
+N_ALT = 50              # fused alternating iterations (solve_joint max_iters)
 
 
 def _feasible(a, pg, bw, emax, ec, s_bits, tau, p_max):
@@ -72,12 +84,17 @@ def selection_solve_tiled(pg, bw, emax, ec, *, s_bits: float, tau: float,
                           p_max: float, rows: int = DEFAULT_ROWS,
                           interpret: bool = False):
     """pg/bw/emax/ec: [M, 128] f32 with M % rows == 0."""
+    kernel = functools.partial(_kernel, s_bits=float(s_bits), tau=float(tau),
+                               p_max=float(p_max))
+    return _launch_tiled(kernel, pg, bw, emax, ec, rows=rows,
+                         interpret=interpret)
+
+
+def _launch_tiled(kernel, pg, bw, emax, ec, *, rows: int, interpret: bool):
     m, lanes = pg.shape
     assert lanes == 128 and m % rows == 0, (m, lanes, rows)
     grid = (m // rows,)
     blk = pl.BlockSpec((rows, 128), lambda i: (i, 0))
-    kernel = functools.partial(_kernel, s_bits=float(s_bits), tau=float(tau),
-                               p_max=float(p_max))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -86,3 +103,56 @@ def selection_solve_tiled(pg, bw, emax, ec, *, s_bits: float, tau: float,
         out_shape=[jax.ShapeDtypeStruct((m, 128), jnp.float32)] * 2,
         interpret=interpret,
     )(pg, bw, emax, ec)
+
+
+# ----------------------------------------- fused alternating fixed point
+
+def _fused_solve_tile(pg, bw, emax, ec, *, s_bits, tau, p_max, n_iters,
+                      faithful_eq13_typo):
+    """The fused alternation on one tile, reusing the *same* step and
+    init as the XLA solver (``core/alternating.py`` — plain elementwise
+    jnp, legal inside a Pallas body), so the kernel can never drift from
+    ``solve_joint_fused``; only the loop shape differs (fixed trip count,
+    the iteration is stationary past its fixed point)."""
+    el = FleetElements(pg=pg, bw=bw, emax=emax, ec=ec)
+    step = functools.partial(_fused_step, el=el, s_bits=s_bits, tau=tau,
+                             p_max=p_max, power_solver="analytic",
+                             faithful_eq13_typo=faithful_eq13_typo)
+    a0, _ = fused_init(el, s_bits=s_bits, tau=tau, p_max=p_max,
+                       faithful_eq13_typo=faithful_eq13_typo)
+
+    def body(_, ap):
+        return step(ap[0])
+
+    # the seeding step(a0) is iteration 1, as in fused_fixed_point /
+    # solve_joint — n_iters total steps, not n_iters + 1
+    return jax.lax.fori_loop(1, n_iters, body, step(a0))
+
+
+def _fused_kernel(pg_ref, bw_ref, emax_ref, ec_ref, a_ref, p_ref,
+                  *, s_bits, tau, p_max, n_iters, faithful_eq13_typo):
+    a, p = _fused_solve_tile(pg_ref[...], bw_ref[...], emax_ref[...],
+                             ec_ref[...], s_bits=s_bits, tau=tau,
+                             p_max=p_max, n_iters=n_iters,
+                             faithful_eq13_typo=faithful_eq13_typo)
+    a_ref[...] = a
+    p_ref[...] = p
+
+
+def fused_solve_tiled(pg, bw, emax, ec, *, s_bits: float, tau: float,
+                      p_max: float, n_iters: int = N_ALT,
+                      faithful_eq13_typo: bool = False,
+                      rows: int = DEFAULT_ROWS, interpret: bool = False):
+    """Fused alternating fixed point over [M, 128] f32 tiles.
+
+    ``n_iters`` is a fixed trip count (fori, fully VMEM-resident): past
+    its fixed point the iteration is stationary, so running the
+    ``solve_joint`` iteration budget unconditionally trades a negligible
+    amount of VPU work for branch-free tiles.
+    """
+    kernel = functools.partial(_fused_kernel, s_bits=float(s_bits),
+                               tau=float(tau), p_max=float(p_max),
+                               n_iters=int(n_iters),
+                               faithful_eq13_typo=bool(faithful_eq13_typo))
+    return _launch_tiled(kernel, pg, bw, emax, ec, rows=rows,
+                         interpret=interpret)

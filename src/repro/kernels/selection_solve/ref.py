@@ -1,11 +1,17 @@
-"""Pure-jnp oracle for the selection_solve kernel (same math as
-core/optimal.py, restated on the kernel's flattened operands)."""
+"""Pure-jnp oracles for the selection_solve kernels (same math as
+core/optimal.py and core/alternating.py, restated on the kernels'
+flattened operands)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.selection_solve.kernel import LN2, N_BISECT
+from repro.kernels.selection_solve.kernel import (
+    LN2,
+    N_ALT,
+    N_BISECT,
+    _fused_solve_tile,
+)
 
 
 def _feasible(a, pg, bw, emax, ec, s_bits, tau, p_max):
@@ -31,3 +37,14 @@ def selection_solve_ref(pg, bw, emax, ec, *, s_bits: float, tau: float,
     expo = jnp.minimum(a * s_bits / (bw * tau), 120.0)
     p = jnp.clip(jnp.expm1(expo * LN2) / pg, 0.0, p_max)
     return a, p
+
+
+def fused_solve_ref(pg, bw, emax, ec, *, s_bits: float, tau: float,
+                    p_max: float, n_iters: int = N_ALT,
+                    faithful_eq13_typo: bool = False):
+    """XLA reference for ``fused_solve_tiled``: the identical tile math
+    run outside ``pallas_call`` (every iterate materialised in HBM)."""
+    return _fused_solve_tile(pg, bw, emax, ec, s_bits=float(s_bits),
+                             tau=float(tau), p_max=float(p_max),
+                             n_iters=int(n_iters),
+                             faithful_eq13_typo=bool(faithful_eq13_typo))

@@ -37,6 +37,49 @@ class TestSelectionSolveKernel:
         assert bool(prob.constraints_satisfied(k.a, k.power).all())
 
 
+class TestFusedSolveKernel:
+    @pytest.mark.parametrize("m", [256, 1024])
+    def test_matches_ref(self, m):
+        from repro.kernels.selection_solve.kernel import fused_solve_tiled
+        from repro.kernels.selection_solve.ref import fused_solve_ref
+        rng = np.random.default_rng(m + 1)
+        pg = jnp.asarray(rng.uniform(1e4, 1e8, (m, 128)), jnp.float32)
+        bw = jnp.asarray(rng.uniform(5e4, 5e6, (m, 128)), jnp.float32)
+        emax = jnp.asarray(np.exp(rng.uniform(-7, 4, (m, 128))), jnp.float32)
+        ec = jnp.asarray(np.exp(rng.uniform(-8, -2, (m, 128))), jnp.float32)
+        kw = dict(s_bits=6.4e6, tau=0.08, p_max=1.0)
+        a_k, p_k = fused_solve_tiled(pg, bw, emax, ec, interpret=True, **kw)
+        a_r, p_r = fused_solve_ref(pg, bw, emax, ec, **kw)
+        np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r),
+                                   rtol=1e-5, atol=1e-8)
+
+    def test_ops_wrapper_matches_solve_joint(self):
+        from repro.core import solve_joint
+        from repro.kernels.selection_solve.ops import solve_joint_fused_kernel
+        prob = sample_problem(6, 100)
+        k = solve_joint_fused_kernel(prob, interpret=True)
+        ref = solve_joint(prob)
+        np.testing.assert_allclose(np.asarray(k.a), np.asarray(ref.a),
+                                   atol=1e-5, rtol=0)
+        np.testing.assert_allclose(np.asarray(k.power),
+                                   np.asarray(ref.power),
+                                   atol=1e-5, rtol=1e-5)
+        assert bool(prob.constraints_satisfied(k.a, k.power,
+                                               rtol=1e-3).all())
+
+    def test_ops_wrapper_fading(self):
+        from repro.core import solve_joint
+        from repro.kernels.selection_solve.ops import solve_joint_fused_kernel
+        prob = sample_problem(2, 40, with_fading=True, n_rounds=5)
+        k = solve_joint_fused_kernel(prob, interpret=True)
+        ref = solve_joint(prob)
+        assert k.a.shape == (40, 5)
+        np.testing.assert_allclose(np.asarray(k.a), np.asarray(ref.a),
+                                   atol=1e-5, rtol=0)
+
+
 # -------------------------------------------------------------- aggregate
 
 class TestMaskedAggregateKernel:
