@@ -43,6 +43,7 @@ TRACKED_PREFIXES = (
     "fl_round_",
     "batch_solver_",
     "fused_solver_",
+    "fleet_service_",
     "solver_",
     "dinkelbach",
     "analytic_power",
@@ -57,6 +58,13 @@ SPEEDUP_FLOORS = {
     # fused single-level solver vs the PR-1 vmapped nested-while path on
     # 2 virtual CPU devices (ISSUE 3 acceptance: >= 4x); measured ~11x
     "fused_solver_fused_b64": 4.0,
+    # fleet service micro-batching vs the same service draining one
+    # request per step; measured ~5x
+    "fleet_service_batched_c8": 2.0,
+    # warm-started vs cold Dinkelbach inner iterations per micro-batch
+    # on the drifting_metro stream.  Deterministic (same seeds => same
+    # counts), so the ratio is machine-independent; measured 3.9x
+    "fleet_service_cold_inner_iters": 2.5,
 }
 
 _SPEEDUP_RE = re.compile(r"speedup=([0-9.]+)x")

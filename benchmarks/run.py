@@ -322,6 +322,90 @@ def bench_fl_sweep_scaling(full: bool):
              f"speedup={us_loop / us_scan:.1f}x")
 
 
+# ------------------------------------------------------- fleet service
+
+def bench_fleet_service_throughput(full: bool):
+    """The online fleet control plane (``repro.serve``) on a drifting
+    channel.  Three claims, three measurements:
+
+    * micro-batching: the service at ``max_batch=C`` vs the same service
+      draining one request per step — isolates what packing requests
+      into padded slots amortises (per-step pack + dispatch overhead);
+    * warm starts: inner Algorithm-1 (Dinkelbach) iterations per
+      micro-batch, warm vs cold, in the paper-faithful mode.  The counts
+      are deterministic (same seeds => same counts), so the ``speedup=``
+      ratio is gated machine-independently by ``benchmarks/compare.py``;
+    * context: a bare jitted per-request ``solve_joint_fused`` loop.  At
+      paper scale on CPU the closed-form solve is so cheap that no
+      serving machinery beats it (docs/serving.md discusses when the
+      service earns its keep); the row keeps that trade-off visible
+      rather than hiding it.
+
+    Wall-clock rows feed the same-runner absolute gate.
+    """
+    from repro.core import make_problem, slice_round, solve_joint_fused
+    from repro.serve import FleetControlService, ServiceConfig
+
+    n_cells, n_dev, n_rounds = (16, 64, 10) if full else (8, 64, 8)
+    cells = [make_problem("drifting_metro", seed=s, n_devices=n_dev,
+                          n_rounds=n_rounds) for s in range(n_cells)]
+    requests = [[(c, slice_round(prob, k)) for c, prob in enumerate(cells)]
+                for k in range(n_rounds)]
+    n_req = n_cells * n_rounds
+
+    def run_service(max_batch=n_cells, **cfg_kw):
+        svc = FleetControlService(ServiceConfig(max_batch=max_batch,
+                                                **cfg_kw))
+        for k, batch in enumerate(requests):
+            svc.run(batch)
+            if k == 0:
+                # round 0 is all-cold and (on the first call of a config)
+                # carries jit compiles; drop it from the steady-state
+                # stats — the caches keep their state
+                svc.stats.reset()
+        return svc
+
+    # steady state: throwaway passes warm every jit signature (batched
+    # and per-request slot shapes); each timed pass then starts from
+    # fresh caches, so it re-measures the same cold->warm request stream
+    run_service()
+    run_service(max_batch=1)
+    us_svc = _timeit(lambda: run_service(), n=5, warmup=1)
+    us_one = _timeit(lambda: run_service(max_batch=1), n=3, warmup=1)
+
+    solve = jax.jit(solve_joint_fused)
+
+    def naive_loop():
+        out = None
+        for batch in requests:
+            for _, prob in batch:
+                out = solve(prob)
+        jax.block_until_ready(out.a)
+
+    us_loop = _timeit(naive_loop, n=3, warmup=1)
+    emit(f"fleet_service_batched_c{n_cells}", us_svc,
+         f"solves_per_sec={n_req / (us_svc / 1e6):.1f} "
+         f"speedup={us_one / us_svc:.1f}x")
+    emit(f"fleet_service_unbatched_c{n_cells}", us_one,
+         f"solves_per_sec={n_req / (us_one / 1e6):.1f}")
+    emit(f"fleet_service_bare_loop_c{n_cells}", us_loop,
+         f"solves_per_sec={n_req / (us_loop / 1e6):.1f}")
+
+    # warm-start iteration drop, paper-faithful Dinkelbach mode: the
+    # counts are deterministic, so the ratio transfers across machines
+    run_service(power_solver="dinkelbach")   # compile both init signatures
+    warm = run_service(power_solver="dinkelbach", warm_start=True)
+    cold = run_service(power_solver="dinkelbach", warm_start=False)
+    wi, ci = warm.stats.mean_inner_iters, cold.stats.mean_inner_iters
+    s = warm.stats.summary()
+    emit("fleet_service_warm_inner_iters", wi,
+         f"p50_ms={s['p50_latency_s'] * 1e3:.2f} "
+         f"p99_ms={s['p99_latency_s'] * 1e3:.2f} "
+         f"warm_fraction={s['warm_fraction']:.2f}")
+    emit("fleet_service_cold_inner_iters", ci,
+         f"speedup={ci / max(wi, 1e-9):.1f}x")
+
+
 # ------------------------------------------------------------- roofline
 
 def bench_roofline(full: bool):
@@ -350,6 +434,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "fl_round": bench_fl_round,
     "fl_sweep_scaling": bench_fl_sweep_scaling,
+    "fleet_service_throughput": bench_fleet_service_throughput,
     "roofline": bench_roofline,
 }
 

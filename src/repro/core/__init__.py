@@ -3,6 +3,7 @@ power allocation for federated learning (Marnissi et al., 2024)."""
 from repro.core.alternating import (
     FleetElements,
     JointSolution,
+    WarmStart,
     fused_fixed_point,
     fused_fixed_point_flat,
     problem_elements,
@@ -14,6 +15,7 @@ from repro.core.batch import (
     BatchSolution,
     ProblemBatch,
     batch_elements,
+    pad_batch,
     shard_batch,
     solve_joint_batch,
     stack_problems,
@@ -34,17 +36,20 @@ from repro.core.schedulers import (
 from repro.core.scenarios import (
     SCENARIOS,
     Scenario,
+    gauss_markov_fading,
     make_batch,
     make_mixed_batch,
     make_problem,
+    slice_round,
 )
 from repro.core.selection import optimal_selection
 
 __all__ = [
     "WirelessFLProblem", "sample_problem",
     "ProblemBatch", "BatchSolution", "stack_problems", "shard_batch",
-    "solve_joint_batch", "batch_elements",
+    "solve_joint_batch", "batch_elements", "pad_batch", "WarmStart",
     "Scenario", "SCENARIOS", "make_problem", "make_batch", "make_mixed_batch",
+    "gauss_markov_fading", "slice_round",
     "PowerSolution", "dinkelbach_power", "analytic_power", "energy_bound_ok",
     "optimal_selection",
     "JointSolution", "solve_joint", "solve_joint_trace", "solve_joint_optimal",

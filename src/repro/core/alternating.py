@@ -40,6 +40,35 @@ Three implementations:
                           element-axis ``NamedSharding`` for mega-fleet
                           (10^5..10^6 device) solves — see
                           ``fused_fixed_point_flat``.
+
+Warm starts (the online / serving path)
+---------------------------------------
+
+``solve_joint`` and ``solve_joint_fused`` accept an optional
+``init=(a0, p0)`` resumable state — typically ``previous.resume`` from an
+earlier :class:`JointSolution` on a nearby problem (a drifted channel,
+a perturbed energy budget).  Semantics, chosen so warm starts can never
+change the answer:
+
+* The selection iterate still starts from the canonical feasible point
+  (eq. 13 at P^max).  Algorithm 2's alternation is monotone
+  non-increasing in ``a`` — the eq.-13 time term at P = P^min(a) is
+  exactly ``a`` — so seeding ``a`` from a stale solution would ratchet
+  the objective down over a stream of drifting solves instead of
+  tracking the true optimum.  The canonical start is a closed form, so
+  there is nothing to save there anyway.
+* What the warm start *does* seed is the iterative machinery: with
+  ``power_solver="dinkelbach"`` the inner Algorithm-1 lambda iteration
+  starts from the init state's energy ``lam0 = a0 P0 T(P0)`` (evaluated
+  on the current channel) instead of the cold constant.  Dinkelbach is
+  globally convergent, so the solution is unchanged (bit-for-bit in
+  practice) while the inner iteration count collapses ~10x on a
+  coherent channel — ``JointSolution.inner_iters`` reports it, and the
+  ``fleet_service_throughput`` benchmark gates it.  The closed-form
+  ``"analytic"`` mode has no inner iterations to save; it accepts
+  ``init`` as a no-op so callers can thread state unconditionally.
+
+When ``init`` is omitted every solver is bit-identical to the cold path.
 """
 from __future__ import annotations
 
@@ -57,11 +86,25 @@ from repro.core.power import (
     dinkelbach_power,
     dinkelbach_power_elements,
     element_tx_time,
+    element_warm_lambda,
     energy_bound_ok,
     energy_gate_elements,
 )
 from repro.core.problem import WirelessFLProblem
 from repro.core.selection import optimal_selection, selection_update_elements
+
+
+class WarmStart(NamedTuple):
+    """Resumable solver state: a previous solution's ``(a, power)``.
+
+    Feed it back as ``solve_joint(..., init=state)`` (or the fused/batch
+    equivalents) to warm-start the next solve on a nearby problem.  Any
+    ``(a0, p0)`` pair of the right shape works — the NamedTuple is just
+    the canonical carrier, obtained from ``JointSolution.resume``.
+    """
+
+    a: jax.Array
+    power: jax.Array
 
 
 class JointSolution(NamedTuple):
@@ -70,6 +113,15 @@ class JointSolution(NamedTuple):
     objective: jax.Array   # scalar, sum_i w_i a_i (per round)
     n_iters: jax.Array     # outer iterations used
     converged: jax.Array   # bool
+    # total inner power-solver (Algorithm 1) iterations summed over the
+    # outer steps; 0 for the closed-form analytic mode.  The figure warm
+    # starts collapse — see the module docstring.
+    inner_iters: jax.Array | int = 0
+
+    @property
+    def resume(self) -> WarmStart:
+        """The resumable warm-start state for a subsequent nearby solve."""
+        return WarmStart(a=self.a, power=self.power)
 
 
 def _init_state(problem: WirelessFLProblem, shape) -> tuple[jax.Array, jax.Array]:
@@ -90,15 +142,20 @@ def _solution_shape(problem: WirelessFLProblem, per_round: bool):
 
 def _alternating_step(problem: WirelessFLProblem, a: jax.Array,
                       solver: Callable[..., PowerSolution],
-                      faithful_eq13_typo: bool) -> tuple[jax.Array, jax.Array]:
-    """One Algorithm-2 alternation: power update, eq.-10 gate, eq.-13."""
+                      faithful_eq13_typo: bool
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One Algorithm-2 alternation: power update, eq.-10 gate, eq.-13.
+
+    Returns ``(a_new, power, inner_iters)`` — the last is the power
+    subproblem's iteration count (0 for the closed-form solvers).
+    """
     sol = solver(problem, a)
     ok = energy_bound_ok(problem, a, sol) & sol.feasible
     a_new = optimal_selection(problem, sol.power,
                               faithful_eq13_typo=faithful_eq13_typo)
     # freeze elements whose power subproblem is infeasible / unbounded
     a_new = jnp.where(ok, a_new, a)
-    return a_new, sol.power
+    return a_new, sol.power, sol.n_iters
 
 
 def _converged(obj: jax.Array, obj_prev: jax.Array, eps: float) -> jax.Array:
@@ -111,34 +168,67 @@ def _converged(obj: jax.Array, obj_prev: jax.Array, eps: float) -> jax.Array:
     return jnp.abs(obj - obj_prev) < eps
 
 
+def _warm_solver(problem: WirelessFLProblem, power_solver: str,
+                 init: Optional[tuple[jax.Array, jax.Array]],
+                 shape) -> Callable[..., PowerSolution]:
+    """Resolve the power solver, seeding Dinkelbach's lambda from ``init``.
+
+    The warm seed only touches the inner iteration's starting point —
+    the converged power/lambda are init-independent (module docstring).
+    """
+    if power_solver == "analytic":
+        return analytic_power          # closed form: init is a no-op
+    if init is None:
+        return dinkelbach_power
+    a0, p0 = init
+    a0 = jnp.broadcast_to(jnp.asarray(a0, jnp.float32), shape)
+    p0 = jnp.broadcast_to(jnp.asarray(p0, jnp.float32), shape)
+    pg = problem._pg(a0)
+    bw = problem.bandwidth_hz if a0.ndim == 1 else problem.bandwidth_hz[:, None]
+    lam0 = element_warm_lambda(a0, p0, pg, bw,
+                               s_bits=problem.grad_size_bits)
+    return functools.partial(dinkelbach_power, lam0=lam0)
+
+
 def solve_joint(problem: WirelessFLProblem,
                 *,
                 eps: float = 1e-7,
                 max_iters: int = 50,
                 power_solver: str = "dinkelbach",
                 faithful_eq13_typo: bool = False,
-                per_round: bool = True) -> JointSolution:
-    """Run Algorithm 2 to convergence for the whole fleet (jit-compatible)."""
+                per_round: bool = True,
+                init: Optional[tuple[jax.Array, jax.Array]] = None
+                ) -> JointSolution:
+    """Run Algorithm 2 to convergence for the whole fleet (jit-compatible).
+
+    ``init=(a0, p0)`` warm-starts the solve from a previous solution's
+    resumable state (``JointSolution.resume``); omitted, the solve is
+    bit-identical to the cold path.  See the module docstring for the
+    warm-start semantics.
+    """
     shape = _solution_shape(problem, per_round)
     a0, p0 = _init_state(problem, shape)
-    solver = analytic_power if power_solver == "analytic" else dinkelbach_power
+    solver = _warm_solver(problem, power_solver, init, shape)
     step = functools.partial(_alternating_step, solver=solver,
                              faithful_eq13_typo=faithful_eq13_typo)
 
     def cond(state):
-        _, _, obj, obj_prev, it = state
+        _, _, obj, obj_prev, it, _ = state
         return ~_converged(obj, obj_prev, eps) & (it < max_iters)
 
     def body(state):
-        a, p, obj, _, it = state
-        a_new, p_new = step(problem, a)
-        return a_new, p_new, problem.objective(a_new), obj, it + 1
+        a, p, obj, _, it, inner = state
+        a_new, p_new, k = step(problem, a)
+        return (a_new, p_new, problem.objective(a_new), obj, it + 1,
+                inner + k)
 
-    a1, p1 = step(problem, a0)
-    state = (a1, p1, problem.objective(a1), problem.objective(a0), jnp.int32(1))
-    a, p, obj, obj_prev, iters = jax.lax.while_loop(cond, body, state)
+    a1, p1, k1 = step(problem, a0)
+    state = (a1, p1, problem.objective(a1), problem.objective(a0),
+             jnp.int32(1), jnp.int32(0) + k1)
+    a, p, obj, obj_prev, iters, inner = jax.lax.while_loop(cond, body, state)
     return JointSolution(a=a, power=p, objective=obj, n_iters=iters,
-                         converged=_converged(obj, obj_prev, eps))
+                         converged=_converged(obj, obj_prev, eps),
+                         inner_iters=inner)
 
 
 def solve_joint_trace(problem: WirelessFLProblem,
@@ -146,24 +236,29 @@ def solve_joint_trace(problem: WirelessFLProblem,
                       eps: float = 1e-7,
                       max_iters: int = 50,
                       power_solver: str = "dinkelbach",
-                      faithful_eq13_typo: bool = False) -> tuple[JointSolution, list[float]]:
+                      faithful_eq13_typo: bool = False,
+                      init: Optional[tuple[jax.Array, jax.Array]] = None
+                      ) -> tuple[JointSolution, list[float]]:
     """Python-loop variant of Algorithm 2 recording the objective trace.
 
     Shares ``_alternating_step`` and ``_converged`` with ``solve_joint``,
     so the recorded trace length and ``n_iters`` match the jitted path
-    step for step (the convergence benchmark counts on this).
+    step for step (the convergence benchmark counts on this); ``init``
+    has the same warm-start semantics too.
     """
     shape = _solution_shape(problem, per_round=True)
     a, p = _init_state(problem, shape)
-    solver = analytic_power if power_solver == "analytic" else dinkelbach_power
+    solver = _warm_solver(problem, power_solver, init, shape)
     step = functools.partial(_alternating_step, solver=solver,
                              faithful_eq13_typo=faithful_eq13_typo)
     obj_prev = problem.objective(a)
     trace = [float(obj_prev)]
     converged = False
     it = 0
+    inner = jnp.int32(0)
     for it in range(1, max_iters + 1):
-        a, p = step(problem, a)
+        a, p, k = step(problem, a)
+        inner = inner + k
         obj = problem.objective(a)
         trace.append(float(obj))
         if bool(_converged(obj, obj_prev, eps)):
@@ -171,7 +266,8 @@ def solve_joint_trace(problem: WirelessFLProblem,
             break
         obj_prev = obj
     res = JointSolution(a=a, power=p, objective=jnp.asarray(trace[-1]),
-                        n_iters=jnp.int32(it), converged=jnp.asarray(converged))
+                        n_iters=jnp.int32(it), converged=jnp.asarray(converged),
+                        inner_iters=inner)
     return res, trace
 
 
@@ -221,20 +317,27 @@ def problem_elements(problem: WirelessFLProblem,
 
 def _fused_step(a: jax.Array, el: FleetElements, *, s_bits: float,
                 tau: float, p_max: float, power_solver: str,
-                faithful_eq13_typo: bool) -> tuple[jax.Array, jax.Array]:
+                faithful_eq13_typo: bool,
+                lam0: float | jax.Array = 1e-3
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One fused alternation on raw elements: power + gate + eq. 13.
 
     With ``power_solver="analytic"`` (default) this is straight-line
     element-wise code — the whole Algorithm-2 body with no inner loop.
     ``"dinkelbach"`` is the faithful reference mode and re-introduces the
-    inner Algorithm-1 iteration (slow; for agreement checks only).
+    inner Algorithm-1 iteration (slow; for agreement checks, and the mode
+    whose ``lam0`` seed the warm-start path collapses).
+
+    Returns ``(a_new, power, inner_iters)``; ``inner_iters`` is 0 in
+    analytic mode.
     """
     if power_solver == "analytic":
         p, lam, feasible = analytic_power_elements(
             a, el.pg, el.bw, s_bits=s_bits, tau=tau, p_max=p_max)
+        inner = jnp.int32(0)
     elif power_solver == "dinkelbach":
-        p, lam, _, feasible = dinkelbach_power_elements(
-            a, el.pg, el.bw, s_bits=s_bits, tau=tau, p_max=p_max)
+        p, lam, inner, feasible = dinkelbach_power_elements(
+            a, el.pg, el.bw, s_bits=s_bits, tau=tau, p_max=p_max, lam0=lam0)
     else:
         raise ValueError(f"unknown power_solver {power_solver!r}")
     ok = energy_gate_elements(a, lam, el.emax, el.ec) & feasible
@@ -242,7 +345,7 @@ def _fused_step(a: jax.Array, el: FleetElements, *, s_bits: float,
     a_new = selection_update_elements(p, t, el.emax, el.ec, tau=tau,
                                       s_bits=s_bits,
                                       faithful_eq13_typo=faithful_eq13_typo)
-    return jnp.where(ok, a_new, a), p
+    return jnp.where(ok, a_new, a), p, inner
 
 
 def fused_init(el: FleetElements, *, s_bits: float, tau: float,
@@ -262,8 +365,10 @@ def fused_init(el: FleetElements, *, s_bits: float, tau: float,
 def fused_fixed_point(el: FleetElements, *, s_bits: float, tau: float,
                       p_max: float, eps: float = 1e-7, max_iters: int = 50,
                       power_solver: str = "analytic",
-                      faithful_eq13_typo: bool = False
-                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+                      faithful_eq13_typo: bool = False,
+                      init: Optional[tuple[jax.Array, jax.Array]] = None
+                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                                 jax.Array]:
     """The flat convergence-masked alternating solve.
 
     One ``lax.while_loop`` over the whole element set; iteration ``n``
@@ -275,28 +380,39 @@ def fused_fixed_point(el: FleetElements, *, s_bits: float, tau: float,
     only the stopping rule differs (elementwise vs global objective), and
     the elementwise rule is the stricter of the two.
 
-    Returns ``(a, power, n_iters, converged)`` with ``converged`` a
-    per-element bool.
+    ``init=(a0, p0)`` element arrays warm-start the solve (module
+    docstring): the selection iterate still starts canonically, but the
+    Dinkelbach mode's inner lambda is seeded from the init state's
+    energy.  Omitted, the solve is bit-identical to the cold path.
+
+    Returns ``(a, power, n_iters, converged, inner_iters)`` with
+    ``converged`` a per-element bool and ``inner_iters`` the summed inner
+    power-solver iterations (0 in analytic mode).
     """
+    lam0 = 1e-3
+    if init is not None and power_solver == "dinkelbach":
+        lam0 = element_warm_lambda(init[0], init[1], el.pg, el.bw,
+                                   s_bits=s_bits)
     step = functools.partial(_fused_step, el=el, s_bits=s_bits, tau=tau,
                              p_max=p_max, power_solver=power_solver,
-                             faithful_eq13_typo=faithful_eq13_typo)
+                             faithful_eq13_typo=faithful_eq13_typo,
+                             lam0=lam0)
     a0, _ = fused_init(el, s_bits=s_bits, tau=tau, p_max=p_max,
                        faithful_eq13_typo=faithful_eq13_typo)
 
     def cond(state):
-        _, _, delta, it = state
+        _, _, delta, it, _ = state
         return jnp.any(delta >= eps) & (it < max_iters)
 
     def body(state):
-        a, _, _, it = state
-        a_new, p_new = step(a)
-        return a_new, p_new, jnp.abs(a_new - a), it + 1
+        a, _, _, it, inner = state
+        a_new, p_new, k = step(a)
+        return a_new, p_new, jnp.abs(a_new - a), it + 1, inner + k
 
-    a1, p1 = step(a0)
-    state = (a1, p1, jnp.abs(a1 - a0), jnp.int32(1))
-    a, p, delta, iters = jax.lax.while_loop(cond, body, state)
-    return a, p, iters, delta < eps
+    a1, p1, k1 = step(a0)
+    state = (a1, p1, jnp.abs(a1 - a0), jnp.int32(1), jnp.int32(0) + k1)
+    a, p, delta, iters, inner = jax.lax.while_loop(cond, body, state)
+    return a, p, iters, delta < eps, inner
 
 
 def element_mesh(mesh: Optional[jax.sharding.Mesh] = None
@@ -315,13 +431,14 @@ def element_mesh(mesh: Optional[jax.sharding.Mesh] = None
     return mesh if mesh.shape[mesh.axis_names[0]] > 1 else None
 
 
+def _pad_flat(x: jax.Array, multiple: int, fill: float) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    return x if pad == 0 else jnp.pad(x, (0, pad), constant_values=fill)
+
+
 def _pad_elements(el: FleetElements, multiple: int) -> FleetElements:
-    e = el.pg.shape[0]
-    pad = (-e) % multiple
-    if pad == 0:
-        return el
     return FleetElements(**{
-        f: jnp.pad(getattr(el, f), (0, pad), constant_values=_ELEMENT_PAD[f])
+        f: _pad_flat(getattr(el, f), multiple, _ELEMENT_PAD[f])
         for f in _ELEMENT_PAD})
 
 
@@ -332,8 +449,10 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
                            faithful_eq13_typo: bool = False,
                            chunk_elements: Optional[int] = None,
                            mesh: Optional[jax.sharding.Mesh] = None,
-                           shard: bool = True
-                           ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+                           shard: bool = True,
+                           init: Optional[tuple[jax.Array, jax.Array]] = None
+                           ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                      jax.Array, jax.Array]:
     """Chunked, device-sharded driver over a flat ``[E]`` element set.
 
     * ``chunk_elements`` bounds the working set: the element axis is padded
@@ -352,15 +471,24 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
       passing an explicit ``mesh`` always shards, regardless of ``shard``
       and the threshold.
 
-    Returns flat ``(a, power, n_iters, converged)`` of the original
-    length E; padding elements are solved (to a = P = 0) and stripped.
+    Returns flat ``(a, power, n_iters, converged, inner_iters)`` of the
+    original length E; padding elements are solved (to a = P = 0) and
+    stripped.  ``init=(a0, p0)`` flat element arrays warm-start the solve
+    (padded/chunked/sharded alongside the elements); on the chunked path
+    ``inner_iters`` sums over chunks (total inner work) while ``n_iters``
+    is the max.
     """
     assert el.pg.ndim == 1, "fused_fixed_point_flat takes flat [E] elements"
     e = el.pg.shape[0]
-    solve = functools.partial(fused_fixed_point, s_bits=s_bits, tau=tau,
-                              p_max=p_max, eps=eps, max_iters=max_iters,
-                              power_solver=power_solver,
-                              faithful_eq13_typo=faithful_eq13_typo)
+
+    def solve(operand):
+        el_c, init_c = operand
+        return fused_fixed_point(el_c, s_bits=s_bits, tau=tau,
+                                 p_max=p_max, eps=eps, max_iters=max_iters,
+                                 power_solver=power_solver,
+                                 faithful_eq13_typo=faithful_eq13_typo,
+                                 init=init_c)
+
     if mesh is not None:
         shard = True                       # an explicit mesh always shards
     else:
@@ -372,6 +500,13 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
     mesh = element_mesh(mesh) if shard else None
     n_shards = 1 if mesh is None else mesh.shape[mesh.axis_names[0]]
 
+    def pad(multiple):
+        el_p = _pad_elements(el, multiple)
+        init_p = None if init is None else tuple(
+            _pad_flat(jnp.asarray(x).reshape(-1), multiple, 0.0)
+            for x in init)
+        return el_p, init_p
+
     def constrain(arrs, spec):
         if mesh is None:
             return arrs
@@ -380,24 +515,26 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
             lambda x: jax.lax.with_sharding_constraint(x, ns), arrs)
 
     if chunk_elements is None:
-        el = constrain(_pad_elements(el, n_shards),
-                       jax.sharding.PartitionSpec(mesh.axis_names[0])
-                       if mesh else None)
-        a, p, iters, conv = solve(el)
-        return a[:e], p[:e], iters, conv[:e]
+        operand = constrain(pad(n_shards),
+                            jax.sharding.PartitionSpec(mesh.axis_names[0])
+                            if mesh else None)
+        a, p, iters, conv, inner = solve(operand)
+        return a[:e], p[:e], iters, conv[:e], inner
 
     chunk = -(-chunk_elements // n_shards) * n_shards
-    el = _pad_elements(el, chunk)
-    n_chunks = el.pg.shape[0] // chunk
-    el = jax.tree_util.tree_map(lambda x: x.reshape(n_chunks, chunk), el)
-    el = constrain(el, jax.sharding.PartitionSpec(None, mesh.axis_names[0])
-                   if mesh else None)
-    a, p, iters, conv = jax.lax.map(solve, el)
+    operand = pad(chunk)
+    n_chunks = operand[0].pg.shape[0] // chunk
+    operand = jax.tree_util.tree_map(
+        lambda x: x.reshape(n_chunks, chunk), operand)
+    operand = constrain(operand,
+                        jax.sharding.PartitionSpec(None, mesh.axis_names[0])
+                        if mesh else None)
+    a, p, iters, conv, inner = jax.lax.map(solve, operand)
 
     def unflat(x):
         return x.reshape(-1)[:e]
 
-    return unflat(a), unflat(p), jnp.max(iters), unflat(conv)
+    return unflat(a), unflat(p), jnp.max(iters), unflat(conv), jnp.sum(inner)
 
 
 def solve_joint_fused(problem: WirelessFLProblem,
@@ -409,7 +546,9 @@ def solve_joint_fused(problem: WirelessFLProblem,
                       per_round: bool = True,
                       chunk_elements: Optional[int] = None,
                       mesh: Optional[jax.sharding.Mesh] = None,
-                      shard: bool = False) -> JointSolution:
+                      shard: bool = False,
+                      init: Optional[tuple[jax.Array, jax.Array]] = None
+                      ) -> JointSolution:
     """Fused single-level Algorithm 2 for one problem (jit-compatible).
 
     Matches ``solve_joint`` to solver tolerance (tests assert <= 1e-5 on
@@ -417,6 +556,10 @@ def solve_joint_fused(problem: WirelessFLProblem,
     flat masked iteration — the mega-fleet path for 10^5+ device
     instances.  ``chunk_elements``/``mesh``/``shard`` are forwarded to
     :func:`fused_fixed_point_flat` (they are jit-static arguments).
+    ``init=(a0, p0)`` (shaped like the solution) warm-starts the solve —
+    see the module docstring; omitted, the solve is bit-identical to the
+    cold path, and the returned ``JointSolution.resume`` is the state to
+    feed the next solve on a drifted problem.
 
     Caveat: with ``faithful_eq13_typo=True`` the verbatim formula has no
     interior fixed point (each sweep contracts a by 1/S), so the
@@ -430,16 +573,22 @@ def solve_joint_fused(problem: WirelessFLProblem,
                          "element set is per (device, round)")
     el = problem_elements(problem, per_round)
     shape = el.pg.shape
+    if init is not None:
+        init = tuple(jnp.broadcast_to(jnp.asarray(x, jnp.float32), shape)
+                     for x in init)
     kw = dict(s_bits=problem.grad_size_bits, tau=problem.tau_th,
               p_max=problem.p_max, eps=eps, max_iters=max_iters,
               power_solver=power_solver,
-              faithful_eq13_typo=faithful_eq13_typo)
+              faithful_eq13_typo=faithful_eq13_typo, init=init)
     if chunk_elements is None and not shard and mesh is None:
-        a, p, iters, conv = fused_fixed_point(el, **kw)
+        a, p, iters, conv, inner = fused_fixed_point(el, **kw)
     else:
+        kw["init"] = None if init is None else tuple(
+            x.reshape(-1) for x in init)
         flat = jax.tree_util.tree_map(lambda x: x.reshape(-1), el)
-        a, p, iters, conv = fused_fixed_point_flat(
+        a, p, iters, conv, inner = fused_fixed_point_flat(
             flat, chunk_elements=chunk_elements, mesh=mesh, shard=shard, **kw)
         a, p, conv = a.reshape(shape), p.reshape(shape), conv.reshape(shape)
     return JointSolution(a=a, power=p, objective=problem.objective(a),
-                         n_iters=iters, converged=jnp.all(conv))
+                         n_iters=iters, converged=jnp.all(conv),
+                         inner_iters=inner)

@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.alternating import (
     FleetElements,
     JointSolution,
+    WarmStart,
     fused_fixed_point_flat,
     solve_joint,
 )
@@ -70,6 +71,9 @@ class BatchSolution(NamedTuple):
     n_iters: jax.Array     # [B] or scalar
     converged: jax.Array   # [B] bool
     mask: jax.Array        # [B, N_max] bool — valid device slots
+    # summed inner power-solver iterations ([B] or scalar; 0 for the
+    # closed-form analytic modes) — what warm starts collapse
+    inner_iters: jax.Array | int = 0
 
     def instance(self, b: int) -> JointSolution:
         """Per-instance JointSolution with padding stripped."""
@@ -78,7 +82,14 @@ class BatchSolution(NamedTuple):
                              objective=self.objective[b],
                              n_iters=jnp.asarray(self.n_iters)[b]
                              if jnp.ndim(self.n_iters) else self.n_iters,
-                             converged=self.converged[b])
+                             converged=self.converged[b],
+                             inner_iters=jnp.asarray(self.inner_iters)[b]
+                             if jnp.ndim(self.inner_iters) else self.inner_iters)
+
+    @property
+    def resume(self) -> WarmStart:
+        """Batch warm-start state for a subsequent nearby batched solve."""
+        return WarmStart(a=self.a, power=self.power)
 
 
 @jax.tree_util.register_dataclass
@@ -122,9 +133,13 @@ class ProblemBatch:
         return out
 
 
-def _pad_tail(x: jax.Array, n_max: int, fill: float) -> jax.Array:
+def _pad_tail(x: jax.Array, n_max: int, fill: float) -> np.ndarray:
+    # numpy, not jnp: stacking happens on the serving hot path (one
+    # micro-batch per step), where B x n_fields eager jnp pad/stack ops
+    # cost ~100x their numpy equivalents in dispatch overhead alone
+    x = np.asarray(x)
     pad = [(0, n_max - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, pad, constant_values=fill)
+    return np.pad(x, pad, constant_values=fill)
 
 
 def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
@@ -161,12 +176,12 @@ def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
 
     stacked: dict[str, jax.Array] = {}
     for name, fill in _PAD_VALUES.items():
-        stacked[name] = jnp.stack(
-            [_pad_tail(getattr(p, name), n_max, fill) for p in problems])
+        stacked[name] = jnp.asarray(np.stack(
+            [_pad_tail(getattr(p, name), n_max, fill) for p in problems]))
     fading = None
     if n_fading:
-        fading = jnp.stack(
-            [_pad_tail(p.fading, n_max, 1.0) for p in problems])
+        fading = jnp.asarray(np.stack(
+            [_pad_tail(p.fading, n_max, 1.0) for p in problems]))
 
     sizes = np.array([p.n_devices for p in problems], np.int32)
     mask = jnp.asarray(np.arange(n_max)[None, :] < sizes[:, None])
@@ -177,6 +192,43 @@ def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
     )
     return ProblemBatch(problem=prob, mask=mask,
                         fleet_sizes=jnp.asarray(sizes))
+
+
+def pad_batch(batch: ProblemBatch, *, batch_size: Optional[int] = None,
+              n_max: Optional[int] = None) -> ProblemBatch:
+    """Pad a batch to fixed ``(batch_size, n_max)`` slot shapes.
+
+    The serving path packs variable request micro-batches into quantised
+    slot shapes so jit compiles once per bucket instead of once per
+    (B, N) combination.  Padded instance rows reuse ``_PAD_VALUES`` (zero
+    energy budget => every solver self-deselects them) with an all-False
+    mask row and fleet size 0; ``BatchSolution.instance`` never exposes
+    them.  Shrinking is not supported.
+    """
+    b0, n0 = batch.batch_size, batch.n_max
+    bsz = b0 if batch_size is None else batch_size
+    nmx = n0 if n_max is None else n_max
+    if bsz < b0 or nmx < n0:
+        raise ValueError(f"pad_batch cannot shrink ({b0}, {n0}) -> "
+                         f"({bsz}, {nmx})")
+    if (bsz, nmx) == (b0, n0):
+        return batch
+    db, dn = bsz - b0, nmx - n0
+    kw = {}
+    for f in dataclasses.fields(WirelessFLProblem):
+        v = getattr(batch.problem, f.name)
+        if f.name in _PAD_VALUES:
+            v = jnp.asarray(np.pad(np.asarray(v), [(0, db), (0, dn)],
+                                   constant_values=_PAD_VALUES[f.name]))
+        elif f.name == "fading" and v is not None:
+            v = jnp.asarray(np.pad(np.asarray(v), [(0, db), (0, dn), (0, 0)],
+                                   constant_values=1.0))
+        kw[f.name] = v
+    mask = jnp.asarray(np.pad(np.asarray(batch.mask), [(0, db), (0, dn)],
+                              constant_values=False))
+    sizes = jnp.asarray(np.pad(np.asarray(batch.fleet_sizes), (0, db)))
+    return ProblemBatch(problem=WirelessFLProblem(**kw), mask=mask,
+                        fleet_sizes=sizes)
 
 
 # --------------------------------------------------------------- sharding
@@ -219,21 +271,27 @@ def _mask_solution(sol: JointSolution, mask: jax.Array) -> BatchSolution:
     return BatchSolution(a=jnp.where(m, sol.a, 0.0),
                          power=jnp.where(m, sol.power, 0.0),
                          objective=sol.objective, n_iters=sol.n_iters,
-                         converged=sol.converged, mask=mask)
+                         converged=sol.converged, mask=mask,
+                         inner_iters=sol.inner_iters)
 
 
 @partial(jax.jit, static_argnames=("method", "power_solver",
                                    "faithful_eq13_typo", "max_iters"))
 def _solve_batch_vmapped(batch: ProblemBatch, method: str, power_solver: str,
                          faithful_eq13_typo: bool, eps: float,
-                         max_iters: int) -> BatchSolution:
+                         max_iters: int,
+                         init: Optional[WarmStart]) -> BatchSolution:
     if method == "optimal":
-        solve = solve_joint_optimal
+        sol = jax.vmap(solve_joint_optimal)(batch.problem)
     else:
         solve = partial(solve_joint, eps=eps, max_iters=max_iters,
                         power_solver=power_solver,
                         faithful_eq13_typo=faithful_eq13_typo)
-    sol = jax.vmap(solve)(batch.problem)
+        if init is None:
+            sol = jax.vmap(solve)(batch.problem)
+        else:
+            sol = jax.vmap(lambda p, a0, p0: solve(p, init=(a0, p0)))(
+                batch.problem, init[0], init[1])
     return _mask_solution(sol, batch.mask)
 
 
@@ -260,7 +318,8 @@ def _solve_batch_fused(batch: ProblemBatch, power_solver: str,
                        faithful_eq13_typo: bool, eps: float, max_iters: int,
                        chunk_elements: Optional[int],
                        mesh: Optional[jax.sharding.Mesh],
-                       shard: bool) -> BatchSolution:
+                       shard: bool,
+                       init: Optional[WarmStart]) -> BatchSolution:
     """The fused flat path: one convergence-masked iteration over the whole
     [B * N_max (* K)] element set — no per-instance lockstep, optionally
     chunked (fixed memory) and sharded along the *element* axis (a single
@@ -268,18 +327,25 @@ def _solve_batch_fused(batch: ProblemBatch, power_solver: str,
     el = batch_elements(batch)
     shape = el.pg.shape
     flat = jax.tree_util.tree_map(lambda x: x.reshape(-1), el)
-    a, p, iters, conv = fused_fixed_point_flat(
+    flat_init = None
+    if init is not None:
+        flat_init = tuple(
+            jnp.broadcast_to(jnp.asarray(x, jnp.float32),
+                             shape).reshape(-1) for x in init)
+    a, p, iters, conv, inner = fused_fixed_point_flat(
         flat, s_bits=batch.problem.grad_size_bits, tau=batch.problem.tau_th,
         p_max=batch.problem.p_max, eps=eps, max_iters=max_iters,
         power_solver=power_solver, faithful_eq13_typo=faithful_eq13_typo,
-        chunk_elements=chunk_elements, mesh=mesh, shard=shard)
+        chunk_elements=chunk_elements, mesh=mesh, shard=shard,
+        init=flat_init)
     a, p, conv = a.reshape(shape), p.reshape(shape), conv.reshape(shape)
     b = shape[0]
     sol = JointSolution(
         a=a, power=p,
         objective=jax.vmap(WirelessFLProblem.objective)(batch.problem, a),
         n_iters=jnp.broadcast_to(iters, (b,)),
-        converged=conv.reshape(b, -1).all(axis=1))
+        converged=conv.reshape(b, -1).all(axis=1),
+        inner_iters=inner)
     return _mask_solution(sol, batch.mask)
 
 
@@ -293,7 +359,8 @@ def solve_joint_batch(batch: ProblemBatch,
                       shard: bool = True,
                       mesh: Optional[jax.sharding.Mesh] = None,
                       chunk_elements: Optional[int] = None,
-                      interpret: Optional[bool] = None) -> BatchSolution:
+                      interpret: Optional[bool] = None,
+                      init: Optional[WarmStart] = None) -> BatchSolution:
     """Solve every instance of ``batch`` in one jitted, device-sharded call.
 
     method:
@@ -332,10 +399,28 @@ def solve_joint_batch(batch: ProblemBatch,
     fleet size (only valid with ``method="fused"``).  Padded device slots
     come back with ``a = power = 0``; per-instance objectives never
     include them (their objective weight is 0).
+
+    ``init`` (a :class:`WarmStart` or ``(a0, p0)`` pair shaped like the
+    batch solution, typically a previous ``BatchSolution.resume``)
+    warm-starts the iterative methods; all-zero rows mean "no previous
+    state" and behave exactly cold, so mixed warm/cold micro-batches need
+    no special casing.  Solutions are init-independent — see
+    ``core.alternating``'s warm-start notes; only iteration counts
+    (``inner_iters``) change.  The direct methods ("optimal"/"kernel")
+    and the fixed-trip "fused_kernel" have no iteration to warm-start
+    and reject ``init``.
     """
     if method not in ("alternating", "fused", "optimal", "kernel",
                       "fused_kernel"):
         raise ValueError(f"unknown method {method!r}")
+    if init is not None:
+        if method not in ("alternating", "fused"):
+            raise ValueError(
+                f"init warm-starts the iterative methods only; "
+                f"method={method!r} computes its solution in a fixed "
+                "number of steps and would silently ignore it")
+        init = WarmStart(a=jnp.asarray(init[0], jnp.float32),
+                         power=jnp.asarray(init[1], jnp.float32))
     alg2 = method in ("alternating", "fused", "fused_kernel")
     if not alg2 and faithful_eq13_typo:
         raise ValueError(
@@ -357,7 +442,8 @@ def solve_joint_batch(batch: ProblemBatch,
             "Dinkelbach reference mode")
     if method == "fused":
         return _solve_batch_fused(batch, power_solver, faithful_eq13_typo,
-                                  eps, max_iters, chunk_elements, mesh, shard)
+                                  eps, max_iters, chunk_elements, mesh, shard,
+                                  init)
     if shard:
         batch = shard_batch(batch, mesh)
     if method == "kernel":
@@ -373,4 +459,4 @@ def solve_joint_batch(batch: ProblemBatch,
             batch, n_iters=max_iters, faithful_eq13_typo=faithful_eq13_typo,
             interpret=True if interpret is None else interpret)
     return _solve_batch_vmapped(batch, method, power_solver,
-                                faithful_eq13_typo, eps, max_iters)
+                                faithful_eq13_typo, eps, max_iters, init)

@@ -89,7 +89,8 @@ def analytic_power_elements(a, pg, bw, *, s_bits: float, tau: float,
 
 
 def dinkelbach_power_elements(a, pg, bw, *, s_bits: float, tau: float,
-                              p_max: float, lam0: float = 1e-3,
+                              p_max: float,
+                              lam0: float | jax.Array = 1e-3,
                               eps: float = 1e-6, max_iters: int = 64
                               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Vectorised Algorithm 1 over raw element arrays.
@@ -98,6 +99,12 @@ def dinkelbach_power_elements(a, pg, bw, *, s_bits: float, tau: float,
     reference for ``analytic_power_elements`` (which is its fixed point in
     closed form); the while-loop makes this a *nested* iteration when used
     inside the fused solver, so it is a reference mode there.
+
+    ``lam0`` seeds the lambda iteration and may be a per-element array —
+    the warm-start hook: Dinkelbach converges to the same fixed point from
+    any start (Newton on a concave F(lambda)), so a ``lam0`` taken from a
+    nearby problem's converged lambda (see :func:`element_warm_lambda`)
+    changes nothing but the iteration count.
     """
     a_safe = jnp.maximum(a, _A_FLOOR)
     p_min = jnp.clip(element_p_min(a, pg, bw, s_bits=s_bits, tau=tau),
@@ -142,6 +149,22 @@ def energy_gate_elements(a, lam, emax, ec) -> jax.Array:
     return lam <= h + 1e-9
 
 
+def element_warm_lambda(a0, p0, pg, bw, *, s_bits: float,
+                        lam_floor: float = 1e-3) -> jax.Array:
+    """Per-element Dinkelbach seed from a previous solution ``(a0, p0)``.
+
+    Evaluates the objective (9a) at the previous powers on the *current*
+    channel: lam0 = a0 P0 T(P0).  On a drifting channel this lands within
+    the drift of the new converged lambda, so Algorithm 1 terminates in
+    1-3 iterations instead of its cold ~10-60 (see docs/serving.md).
+    Elements with no usable previous state (a0 = 0 or P0 = 0, e.g. padded
+    slots or newly admitted devices) fall back to the cold-start constant
+    ``lam_floor`` — the same 1e-3 the cold path uses.
+    """
+    lam = _element_lam(a0, p0, pg, bw, s_bits=s_bits)
+    return jnp.where((a0 > 0) & (p0 > 0) & (lam > 0), lam, lam_floor)
+
+
 # -------------------------------------------------------- problem level
 
 def _element_operands(problem: WirelessFLProblem, a: jax.Array):
@@ -153,7 +176,7 @@ def _element_operands(problem: WirelessFLProblem, a: jax.Array):
 def dinkelbach_power(problem: WirelessFLProblem,
                      a: jax.Array,
                      *,
-                     lam0: float = 1e-3,
+                     lam0: float | jax.Array = 1e-3,
                      eps: float = 1e-6,
                      max_iters: int = 64) -> PowerSolution:
     """Vectorised Algorithm 1 over every (i, k) subproblem simultaneously."""

@@ -83,6 +83,58 @@ def make_mixed_batch(names: Sequence[str], seed: int = 0,
                            for i, n in enumerate(names)])
 
 
+# ----------------------------------------- time-correlated channel drift
+
+def gauss_markov_fading(rng: np.random.Generator | int, n_devices: int,
+                        n_rounds: int, coherence: float = 0.9) -> np.ndarray:
+    """Time-correlated Rayleigh fading power gains, shape ``[N, K]``.
+
+    First-order Gauss–Markov (AR(1)) evolution of the complex channel —
+    the discrete-time Jakes/Clarke surrogate used throughout the wireless
+    FL literature (cf. Perazzone et al., arXiv:2201.07912; Yang et al.'s
+    per-round re-solving):
+
+        h_0 ~ CN(0, 1),    h_k = rho h_{k-1} + sqrt(1 - rho^2) w_k
+
+    with ``rho = coherence`` in [0, 1) and w_k ~ CN(0, 1) i.i.d.  Power
+    gains ``g_k = |h_k|^2`` are marginally Exp(1) — exactly the
+    ``rayleigh_fading`` scenario's distribution — but successive rounds
+    correlate as ``corr(g_k, g_{k+1}) = rho^2``, so successive per-round
+    solves are near-identical: the regime the warm-started serving path
+    (``repro.serve``) exploits.  ``coherence=0`` recovers i.i.d. block
+    fading; ``coherence -> 1`` approaches a static channel.
+    """
+    if not 0.0 <= coherence < 1.0:
+        raise ValueError(f"coherence must be in [0, 1), got {coherence}")
+    rng = np.random.default_rng(rng) if not isinstance(
+        rng, np.random.Generator) else rng
+
+    def cn(size):
+        return (rng.standard_normal(size) + 1j * rng.standard_normal(size)) \
+            / np.sqrt(2.0)
+
+    h = cn(n_devices)
+    cols = [np.abs(h) ** 2]
+    for _ in range(n_rounds - 1):
+        h = coherence * h + np.sqrt(1.0 - coherence ** 2) * cn(n_devices)
+        cols.append(np.abs(h) ** 2)
+    return np.stack(cols, axis=1)
+
+
+def slice_round(problem: WirelessFLProblem, k: int) -> WirelessFLProblem:
+    """Round ``k`` of a fading problem as a standalone 1-round problem.
+
+    The per-request unit of the serving path: a ``[N, K]`` drifting
+    scenario becomes a stream of K single-round problems whose channels
+    drift between successive requests.  Solutions have shape ``[N, 1]``.
+    """
+    if problem.fading is None:
+        raise ValueError("slice_round needs a fading ([N, K]) problem")
+    return dataclasses.replace(problem,
+                               fading=problem.fading[:, k:k + 1],
+                               n_rounds=1)
+
+
 # ------------------------------------------------------------ registry
 
 
@@ -166,6 +218,44 @@ def _metro_1m_users(seed, *, n_devices: int = 1_000_000,
     kw.setdefault("total_bandwidth_hz", 1e10)
     kw.setdefault("dataset_total", 600_000_000)
     return sample_problem(seed, n_devices, **kw)
+
+
+@register("drifting_metro",
+          "Paper-sized metro cell whose Rayleigh channel drifts between "
+          "rounds (Gauss-Markov, coherence 0.9 by default): marginally "
+          "identical to rayleigh_fading but with corr(g_k, g_{k+1}) = "
+          "coherence^2, so successive per-round solves are near-identical "
+          "— the warm-start serving regime (slice_round + "
+          "solve_joint_fused(init=prev.resume), see docs/serving.md).",
+          "beyond-paper (cf. Perazzone et al., arXiv:2201.07912)",
+          n_devices=100)
+def _drifting_metro(seed, *, n_devices: int = 100, n_rounds: int = 20,
+                    coherence: float = 0.9, **kw) -> WirelessFLProblem:
+    prob = sample_problem(seed, n_devices, n_rounds=n_rounds, **kw)
+    fading = gauss_markov_fading(np.random.default_rng(seed + 104_729),
+                                 n_devices, n_rounds, coherence)
+    return dataclasses.replace(prob,
+                               fading=jnp.asarray(fading, jnp.float32))
+
+
+@register("drifting_mega_fleet",
+          "mega_fleet_100k with Gauss-Markov channel drift (coherence "
+          "0.95): 100 000 devices x K correlated rounds.  Stream it "
+          "through the fleet service (or slice_round + chunked "
+          "solve_joint_fused) to exercise warm starts at mega-fleet "
+          "scale.",
+          "beyond-paper", n_devices=100_000)
+def _drifting_mega_fleet(seed, *, n_devices: int = 100_000,
+                         n_rounds: int = 4, coherence: float = 0.95,
+                         **kw) -> WirelessFLProblem:
+    kw.setdefault("area_m", 3163.0)          # ~10 km^2, as mega_fleet_100k
+    kw.setdefault("total_bandwidth_hz", 1e9)
+    kw.setdefault("dataset_total", 60_000_000)
+    prob = sample_problem(seed, n_devices, n_rounds=n_rounds, **kw)
+    fading = gauss_markov_fading(np.random.default_rng(seed + 104_729),
+                                 n_devices, n_rounds, coherence)
+    return dataclasses.replace(prob,
+                               fading=jnp.asarray(fading, jnp.float32))
 
 
 @register("sparse_energy_starved",

@@ -22,12 +22,17 @@ All schedulers are pure-JAX and jit/vmap friendly.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.alternating import JointSolution, solve_joint, solve_joint_fused
+from repro.core.alternating import (
+    JointSolution,
+    WarmStart,
+    solve_joint,
+    solve_joint_fused,
+)
 from repro.core.batch import BatchSolution, ProblemBatch, solve_joint_batch
 from repro.core.optimal import solve_joint_optimal
 from repro.core.problem import WirelessFLProblem
@@ -63,19 +68,33 @@ class ProbabilisticScheduler:
     unbiased_aggregation: bool = False  # beyond-paper alpha_i / a_i correction
     faithful_eq13_typo: bool = False
 
-    def solve(self, problem: WirelessFLProblem) -> JointSolution:
+    def solve(self, problem: WirelessFLProblem,
+              init: Optional[WarmStart] = None) -> JointSolution:
+        """Run the configured joint solver.
+
+        ``init`` (a previous ``JointSolution.resume``) warm-starts the
+        iterative solvers — bit-identical results, fewer inner iterations
+        on a drifted problem (see ``core.alternating``).  The exact
+        "optimal" solver has no iteration to warm-start and rejects it.
+        """
         if self.solver == "optimal":
+            if init is not None:
+                raise ValueError("solver='optimal' computes the exact "
+                                 "optimum directly; init would be ignored")
             return solve_joint_optimal(problem)
         if self.solver == "fused":
             # the fused single-level solver always uses the closed-form
             # (analytic) power update — it IS the Dinkelbach fixed point
             return solve_joint_fused(problem,
-                                     faithful_eq13_typo=self.faithful_eq13_typo)
+                                     faithful_eq13_typo=self.faithful_eq13_typo,
+                                     init=init)
         return solve_joint(problem, power_solver=self.power_solver,
-                           faithful_eq13_typo=self.faithful_eq13_typo)
+                           faithful_eq13_typo=self.faithful_eq13_typo,
+                           init=init)
 
-    def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
-        sol = self.solve(problem)
+    def precompute(self, problem: WirelessFLProblem,
+                   init: Optional[WarmStart] = None) -> SchedulerState:
+        sol = self.solve(problem, init=init)
         return SchedulerState(a=sol.a, power=sol.power,
                               agg_weights=_data_weights(problem))
 
@@ -98,8 +117,10 @@ class ProbabilisticScheduler:
 
         Keyword overrides win over the scheduler's configuration, so e.g.
         ``solve_batch(batch, method="kernel")`` reaches the Pallas fast
-        path.  As with ``solve()``, the Algorithm-2 knobs (power solver,
-        eq.-13 typo flag) only apply to the alternating method.
+        path, and ``solve_batch(batch, init=prev.resume)`` warm-starts
+        the iterative methods from a previous batch solution.  As with
+        ``solve()``, the Algorithm-2 knobs (power solver, eq.-13 typo
+        flag) only apply to the alternating method.
         """
         kw.setdefault("method", self.solver
                       if self.solver in ("optimal", "fused") else "alternating")

@@ -122,11 +122,12 @@ def _fused_solve_tile(pg, bw, emax, ec, *, s_bits, tau, p_max, n_iters,
                        faithful_eq13_typo=faithful_eq13_typo)
 
     def body(_, ap):
-        return step(ap[0])
+        return step(ap[0])[:2]
 
     # the seeding step(a0) is iteration 1, as in fused_fixed_point /
-    # solve_joint — n_iters total steps, not n_iters + 1
-    return jax.lax.fori_loop(1, n_iters, body, step(a0))
+    # solve_joint — n_iters total steps, not n_iters + 1 (the step's third
+    # output, the inner Dinkelbach count, is always 0 in analytic mode)
+    return jax.lax.fori_loop(1, n_iters, body, step(a0)[:2])
 
 
 def _fused_kernel(pg_ref, bw_ref, emax_ref, ec_ref, a_ref, p_ref,

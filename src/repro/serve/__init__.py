@@ -1,0 +1,21 @@
+"""Online fleet control plane: the request-driven serving path.
+
+The paper's base station re-solves the joint selection/power problem
+(Algorithm 2) every round for every cell it serves; ``repro.serve`` turns
+the offline solvers into that online service — micro-batched, padded to
+quantised slot shapes, and warm-started from cached previous solutions on
+drifting channels.  See ``docs/serving.md``.
+"""
+from repro.serve.fleet_service import (
+    FleetControlService,
+    ServiceConfig,
+    ServiceStats,
+    SolveRequest,
+    SolveResponse,
+    quantized_problem_key,
+)
+
+__all__ = [
+    "FleetControlService", "ServiceConfig", "ServiceStats",
+    "SolveRequest", "SolveResponse", "quantized_problem_key",
+]

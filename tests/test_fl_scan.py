@@ -180,3 +180,71 @@ def test_scan_rejects_uplink_quantisation(setup):
                    aggregate="stacked", uplink_bits=8)
     with pytest.raises(NotImplementedError):
         run_fl_scan(prob, ProbabilisticScheduler(), train, parts, test, cfg)
+
+
+# ------------------------------------------------- determinism (ISSUE 4)
+
+def _scan_digest(prob, train, parts, test, cfg):
+    import hashlib
+    res = run_fl_scan(prob, ProbabilisticScheduler(), train, parts, test,
+                      cfg)
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(res.params):
+        h.update(np.asarray(leaf).tobytes())
+    h.update(np.asarray(res.history.energy).tobytes())
+    h.update(np.asarray(res.history.participants).tobytes())
+    return h.hexdigest()
+
+
+def test_scan_repeat_runs_bitwise_identical(setup):
+    """Same seed, same process: the scanned trajectory is exactly
+    reproducible (params, accounting, participation stream)."""
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=4, eval_every=4, batch_per_client=2, seed=3)
+    d1 = _scan_digest(prob, train, parts, test, cfg)
+    d2 = _scan_digest(prob, train, parts, test, cfg)
+    assert d1 == d2
+
+
+@pytest.mark.slow
+def test_scan_cross_process_bitwise(setup, tmp_path):
+    """A fresh interpreter with the same seed reproduces the scanned
+    trajectory digest bit for bit (same XLA, same machine)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    prob, train, parts, test = setup
+    cfg = FLConfig(n_rounds=4, eval_every=4, batch_per_client=2, seed=3)
+    parent = _scan_digest(prob, train, parts, test, cfg)
+    repo = Path(__file__).resolve().parents[1]
+    script = textwrap.dedent("""
+        import hashlib
+        import jax, numpy as np
+        from repro.core import ProbabilisticScheduler, sample_problem
+        from repro.data.partition import dirichlet_partition
+        from repro.data.synthetic import make_mnist_like
+        from repro.fl.engine import FLConfig
+        from repro.fl.scan_engine import run_fl_scan
+        train, test = make_mnist_like(900, 200, seed=0)
+        parts = dirichlet_partition(train, 16, beta=0.3, seed=1)
+        sizes = np.array([len(p) for p in parts])
+        prob = sample_problem(0, 16, tau_th=0.5, dirichlet_sizes=sizes)
+        cfg = FLConfig(n_rounds=4, eval_every=4, batch_per_client=2, seed=3)
+        res = run_fl_scan(prob, ProbabilisticScheduler(), train, parts,
+                          test, cfg)
+        h = hashlib.sha256()
+        for leaf in jax.tree_util.tree_leaves(res.params):
+            h.update(np.asarray(leaf).tobytes())
+        h.update(np.asarray(res.history.energy).tobytes())
+        h.update(np.asarray(res.history.participants).tobytes())
+        print(h.hexdigest())
+    """)
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=str(repo))
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert res.stdout.strip() == parent

@@ -1,0 +1,198 @@
+"""Fleet control-plane service (``repro.serve``): correctness of the
+micro-batched, warm-started serving loop against direct solves, cache
+behaviour, slot padding, compatibility grouping and accounting."""
+import numpy as np
+import pytest
+
+from repro.core import make_problem, sample_problem, slice_round, solve_joint_fused
+from repro.serve import (
+    FleetControlService,
+    ServiceConfig,
+    SolveResponse,
+    quantized_problem_key,
+)
+
+
+def drift_cells(n_cells, n_devices, n_rounds, seed0=0):
+    return [make_problem("drifting_metro", seed=s, n_devices=n_devices,
+                         n_rounds=n_rounds) for s in range(seed0, seed0 + n_cells)]
+
+
+class TestServiceCorrectness:
+    @pytest.mark.parametrize("power_solver", ["analytic", "dinkelbach"])
+    def test_matches_direct_solves(self, power_solver):
+        cells = drift_cells(3, 16, 4)
+        svc = FleetControlService(ServiceConfig(max_batch=4,
+                                                power_solver=power_solver))
+        for k in range(4):
+            responses = svc.run([(c, slice_round(p, k))
+                                 for c, p in enumerate(cells)])
+            assert len(responses) == 3
+            for r in responses:
+                ref = solve_joint_fused(slice_round(cells[r.cell_id], k),
+                                        power_solver=power_solver)
+                # 1e-5, the repo-wide solver agreement tolerance: the
+                # batched warm program is a different XLA fusion than the
+                # direct jit, so f32 noise at the p_max clip boundary is
+                # expected
+                np.testing.assert_allclose(np.asarray(r.solution.a),
+                                           np.asarray(ref.a), atol=1e-5)
+                np.testing.assert_allclose(np.asarray(r.solution.power),
+                                           np.asarray(ref.power),
+                                           atol=1e-5, rtol=1e-5)
+
+    def test_ragged_requests_one_batch(self):
+        probs = [sample_problem(i, n) for i, n in enumerate([5, 12, 9])]
+        svc = FleetControlService(ServiceConfig(max_batch=4))
+        responses = svc.run(list(enumerate(probs)))
+        assert len(responses) == 3
+        for r in responses:
+            assert r.solution.a.shape == (probs[r.cell_id].n_devices,)
+            ref = solve_joint_fused(probs[r.cell_id])
+            np.testing.assert_allclose(np.asarray(r.solution.a),
+                                       np.asarray(ref.a), atol=1e-6)
+
+    def test_incompatible_statics_split_batches(self):
+        a = sample_problem(0, 8, tau_th=0.08)
+        b = sample_problem(1, 8, tau_th=0.5)   # different static tau
+        svc = FleetControlService(ServiceConfig(max_batch=8))
+        svc.submit("a", a)
+        svc.submit("b", b)
+        first = svc.step()
+        assert [r.cell_id for r in first] == ["a"]
+        assert svc.pending == 1
+        second = svc.step()
+        assert [r.cell_id for r in second] == ["b"]
+        assert svc.stats.n_batches == 2
+
+    def test_queue_overflow_multiple_steps(self):
+        probs = [sample_problem(i, 8) for i in range(5)]
+        svc = FleetControlService(ServiceConfig(max_batch=2))
+        out = svc.run(list(enumerate(probs)))
+        assert len(out) == 5
+        assert svc.stats.n_batches == 3
+
+
+class TestWarmCache:
+    def test_identical_resubmit_hits_feature_cache(self):
+        prob = sample_problem(0, 12)
+        svc = FleetControlService(ServiceConfig(max_batch=2))
+        (r1,) = svc.run([("cell", prob)])
+        assert not r1.warm_started
+        (r2,) = svc.run([("cell", prob)])
+        assert r2.warm_started and r2.cache_hit
+        np.testing.assert_array_equal(np.asarray(r1.solution.a),
+                                      np.asarray(r2.solution.a))
+
+    def test_feature_cache_shared_across_cells(self):
+        prob = sample_problem(0, 12)
+        svc = FleetControlService(ServiceConfig(max_batch=2))
+        svc.run([("cell-a", prob)])
+        (r,) = svc.run([("cell-b", prob)])   # same features, new cell
+        assert r.warm_started and r.cache_hit
+
+    def test_drifted_channel_falls_back_to_cell_cache(self):
+        prob = make_problem("drifting_metro", seed=0, n_devices=12,
+                            n_rounds=2, coherence=0.5)
+        svc = FleetControlService(ServiceConfig(max_batch=2))
+        svc.run([("cell", slice_round(prob, 0))])
+        (r,) = svc.run([("cell", slice_round(prob, 1))])
+        assert r.warm_started and not r.cache_hit
+
+    def test_warm_start_disabled(self):
+        prob = sample_problem(0, 12)
+        svc = FleetControlService(ServiceConfig(max_batch=2,
+                                                warm_start=False))
+        svc.run([("cell", prob)])
+        (r,) = svc.run([("cell", prob)])
+        assert not r.warm_started
+
+    def test_lru_eviction(self):
+        svc = FleetControlService(ServiceConfig(max_batch=2, cache_size=2))
+        probs = [sample_problem(i, 8) for i in range(3)]
+        for i, p in enumerate(probs):
+            svc.run([(i, p)])
+        (r0,) = svc.run([(0, probs[0])])     # evicted by 1 and 2
+        assert not r0.warm_started
+        (r2,) = svc.run([(2, probs[2])])     # still resident
+        assert r2.warm_started
+
+    def test_fleet_size_change_is_cold(self):
+        svc = FleetControlService(ServiceConfig(max_batch=2))
+        svc.run([("cell", sample_problem(0, 8))])
+        (r,) = svc.run([("cell", sample_problem(0, 12))])
+        assert not r.warm_started
+
+    def test_warm_iteration_drop_dinkelbach(self):
+        """The service-level acceptance check: warm inner iterations per
+        micro-batch measurably below cold on the drifting stream."""
+        cells = drift_cells(4, 24, 6)
+
+        def run(warm):
+            svc = FleetControlService(ServiceConfig(
+                max_batch=4, power_solver="dinkelbach", warm_start=warm))
+            for k in range(6):
+                svc.run([(c, slice_round(p, k))
+                         for c, p in enumerate(cells)])
+                if k == 0:
+                    svc.stats.reset()
+            return svc.stats.mean_inner_iters
+
+        warm_iters, cold_iters = run(True), run(False)
+        assert warm_iters <= 0.5 * cold_iters
+
+
+class TestQuantizedKey:
+    def test_row_keys_match_per_problem_function(self):
+        """The service's batch-level key computation must reproduce
+        ``quantized_problem_key`` exactly, or cache hits would depend on
+        which path computed the key."""
+        probs = [sample_problem(i, n) for i, n in enumerate([6, 10, 8])]
+        svc = FleetControlService(ServiceConfig(max_batch=4))
+        responses = svc.run(list(enumerate(probs)))
+        assert len(responses) == 3
+        for i, p in enumerate(probs):
+            key = quantized_problem_key(p)
+            assert svc._feature_cache.get(key) is not None, i
+
+    def test_key_stability_and_sensitivity(self):
+        p = sample_problem(0, 16)
+        assert quantized_problem_key(p) == quantized_problem_key(p)
+        other = sample_problem(1, 16)
+        assert quantized_problem_key(p) != quantized_problem_key(other)
+
+    def test_key_quantisation_buckets_small_drift(self):
+        import dataclasses
+        import jax.numpy as jnp
+        p = sample_problem(0, 16)
+        nudged = dataclasses.replace(
+            p, energy_budget_j=p.energy_budget_j * 1.0001)
+        far = dataclasses.replace(
+            p, energy_budget_j=jnp.asarray(p.energy_budget_j * 2.0))
+        assert quantized_problem_key(p) == quantized_problem_key(nudged)
+        assert quantized_problem_key(p) != quantized_problem_key(far)
+
+
+class TestStats:
+    def test_summary_fields(self):
+        cells = drift_cells(2, 8, 3)
+        svc = FleetControlService(ServiceConfig(max_batch=2))
+        for k in range(3):
+            svc.run([(c, slice_round(p, k)) for c, p in enumerate(cells)])
+        s = svc.stats.summary()
+        assert s["requests"] == s["solved"] == 6
+        assert s["batches"] == 3
+        assert s["solves_per_sec"] > 0
+        assert 0 < s["p50_latency_s"] <= s["p99_latency_s"]
+        assert 0 < s["warm_fraction"] <= 1
+        assert s["mean_outer_iters"] >= 1
+
+    def test_reset(self):
+        svc = FleetControlService(ServiceConfig(max_batch=2))
+        svc.run([("c", sample_problem(0, 8))])
+        svc.stats.reset()
+        assert svc.stats.n_solved == 0
+        assert svc.stats.summary()["solves_per_sec"] == 0.0
+        # caches survive a stats reset
+        (r,) = svc.run([("c", sample_problem(0, 8))])
+        assert isinstance(r, SolveResponse) and r.warm_started

@@ -1,0 +1,158 @@
+"""Property-based tests (hypothesis) for the client-selection schedulers.
+
+Three families of invariants across random problems:
+
+* sampling correctness — the empirical participation frequency of
+  ``ProbabilisticScheduler.sample`` / ``sample_batch`` converges to the
+  solved probabilities ``a*`` (CLT-bounded check over many draws);
+* ``_round_preserving_count`` — binary output, expected-count
+  preservation, and top-k structure (every selected device has a >= every
+  unselected one);
+* state shapes and simplex constraints for the Deterministic / Uniform /
+  EquallyWeighted benchmark schedulers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_scheduler, sample_problem, stack_problems
+from repro.core.schedulers import (
+    DeterministicScheduler,
+    EquallyWeightedScheduler,
+    ProbabilisticScheduler,
+    UniformScheduler,
+    _round_preserving_count,
+)
+
+
+def _problem(seed, n, tau, pmax):
+    return sample_problem(seed, n, tau_th=tau, p_max=pmax)
+
+
+# n from a tiny set so jax's shape-keyed compilation cache is reused
+# across hypothesis examples (arbitrary n => a recompile per example)
+problem_strategy = st.builds(
+    _problem,
+    seed=st.integers(0, 2 ** 31 - 1),
+    n=st.sampled_from([8, 32]),
+    tau=st.floats(0.01, 2.0),
+    pmax=st.floats(0.05, 10.0),
+)
+
+N_DRAWS = 4096
+# 5-sigma CLT bound on a Bernoulli mean over N_DRAWS, worst case a = 0.5,
+# plus f32 slack: 5 * 0.5 / sqrt(4096) ~ 0.039
+FREQ_TOL = 0.045
+
+
+@settings(max_examples=15, deadline=None)
+@given(problem_strategy, st.integers(0, 2 ** 31 - 1))
+def test_sample_frequency_converges_to_a_star(problem, key_seed):
+    sch = ProbabilisticScheduler(solver="fused")
+    state = sch.precompute(problem)
+    keys = jax.random.split(jax.random.PRNGKey(key_seed), N_DRAWS)
+    masks = jax.vmap(lambda k: sch.sample(state, k).mask)(keys)
+    freq = np.asarray(jnp.mean(masks.astype(jnp.float32), axis=0))
+    a = np.asarray(state.a if state.a.ndim == 1 else state.a[:, 0])
+    np.testing.assert_allclose(freq, a, atol=FREQ_TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 2 ** 31 - 1))
+def test_sample_batch_frequency_converges(seed, key_seed):
+    probs = [sample_problem(seed + i, 16) for i in range(3)]
+    sch = ProbabilisticScheduler(solver="fused")
+    state = sch.precompute_batch(stack_problems(probs))
+    keys = jax.random.split(jax.random.PRNGKey(key_seed), N_DRAWS)
+    masks = jax.vmap(lambda k: sch.sample_batch(state, k).mask)(keys)
+    freq = np.asarray(jnp.mean(masks.astype(jnp.float32), axis=0))
+    np.testing.assert_allclose(freq, np.asarray(state.a), atol=FREQ_TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=64))
+def test_round_preserving_count_invariants(a_list):
+    a = jnp.asarray(np.asarray(a_list, np.float32))
+    sel = np.asarray(_round_preserving_count(a))
+    # binary
+    assert set(np.unique(sel)).issubset({0.0, 1.0})
+    # expected-count preserving: |{selected}| = clip(round(sum a), 1, N)
+    k_expect = int(np.clip(np.round(np.asarray(a).sum()), 1, a.shape[0]))
+    assert int(sel.sum()) == k_expect
+    # top-k structure: min selected prob >= max unselected prob
+    probs = np.asarray(a)
+    if 0 < k_expect < a.shape[0]:
+        assert probs[sel == 1].min() >= probs[sel == 0].max() - 1e-7
+
+
+@settings(max_examples=10, deadline=None)
+@given(problem_strategy)
+def test_probabilistic_state_invariants(problem):
+    state = ProbabilisticScheduler(solver="fused").precompute(problem)
+    n = problem.n_devices
+    a = np.asarray(state.a)
+    assert state.a.shape[0] == n and state.power.shape == state.a.shape
+    assert ((a >= 0) & (a <= 1)).all()
+    p = np.asarray(state.power)
+    assert ((p >= 0) & (p <= problem.p_max * (1 + 1e-6))).all()
+    # aggregation weights are the data simplex
+    w = np.asarray(state.agg_weights)
+    assert w.shape == (n,) and (w >= 0).all()
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(problem_strategy)
+def test_deterministic_state_invariants(problem):
+    inner = ProbabilisticScheduler(solver="fused")
+    state = DeterministicScheduler(inner=inner).precompute(problem)
+    a = np.asarray(state.a)
+    assert set(np.unique(a)).issubset({0.0, 1.0})
+    draw = DeterministicScheduler(inner=inner).sample(
+        state, jax.random.PRNGKey(0))
+    # deterministic: the mask IS the binarised a, independent of the key
+    np.testing.assert_array_equal(np.asarray(draw.mask), a > 0)
+    w = np.asarray(state.agg_weights)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(problem_strategy, st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_uniform_state_invariants(problem, m, key_seed):
+    m = min(m, problem.n_devices)
+    sch = UniformScheduler(m=m)
+    state = sch.precompute(problem)
+    # a is the uniform M/N simplex scaled to expected count M
+    np.testing.assert_allclose(np.asarray(state.a),
+                               m / problem.n_devices, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state.power), problem.p_max)
+    draw = sch.sample(state, jax.random.PRNGKey(key_seed))
+    assert int(np.asarray(draw.mask).sum()) == m   # exactly M participants
+    np.testing.assert_allclose(np.asarray(state.agg_weights).sum(), 1.0,
+                               rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(problem_strategy)
+def test_equally_weighted_state_invariants(problem):
+    inner = ProbabilisticScheduler(solver="fused")
+    state = EquallyWeightedScheduler(inner=inner).precompute(problem)
+    a = np.asarray(state.a)
+    assert set(np.unique(a)).issubset({0.0, 1.0})
+    # equal weights over the *selected* set: alpha restricted to the
+    # selected devices sums to 1, and every entry is identical
+    alpha = np.asarray(state.agg_weights)
+    sel = a if a.ndim == 1 else a[:, 0]
+    assert len(np.unique(alpha)) == 1
+    np.testing.assert_allclose((alpha * (sel > 0)).sum(), 1.0, rtol=1e-5)
+
+
+def test_make_scheduler_registry():
+    for name in ("probabilistic", "deterministic", "uniform",
+                 "equally_weighted"):
+        sch = make_scheduler(name)
+        assert hasattr(sch, "precompute") and hasattr(sch, "sample")

@@ -1,0 +1,236 @@
+"""Warm-start threading through the solver stack (ISSUE 4 tentpole).
+
+The contract, for every entry point (``solve_joint``,
+``solve_joint_fused``, ``solve_joint_batch``, the scheduler wrappers):
+
+* ``init`` never changes the answer — warm and cold solutions agree to
+  solver epsilon (for Dinkelbach's globally-convergent lambda iteration
+  they agree bitwise in practice; we assert a tight tolerance);
+* on a time-correlated (``drifting_metro``) channel, warm-starting from
+  the previous round's ``resume`` state collapses the inner Algorithm-1
+  iteration count — the acceptance criterion;
+* the drifting scenarios themselves have the advertised statistics
+  (Exp(1) marginals, ``corr = coherence^2`` round-to-round).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    WarmStart,
+    gauss_markov_fading,
+    make_problem,
+    sample_problem,
+    slice_round,
+    solve_joint,
+    solve_joint_batch,
+    solve_joint_fused,
+    stack_problems,
+)
+from repro.core.schedulers import ProbabilisticScheduler
+
+
+def assert_same_solution(warm, cold, tol=1e-6):
+    np.testing.assert_allclose(np.asarray(warm.a), np.asarray(cold.a),
+                               atol=tol, rtol=0)
+    np.testing.assert_allclose(np.asarray(warm.power),
+                               np.asarray(cold.power), atol=tol, rtol=tol)
+
+
+class TestWarmStartSolveJoint:
+    def test_solution_unchanged_same_problem(self):
+        prob = sample_problem(0, 48)
+        cold = solve_joint(prob)
+        warm = solve_joint(prob, init=cold.resume)
+        assert_same_solution(warm, cold, tol=0.0)   # bitwise
+        assert int(warm.inner_iters) < int(cold.inner_iters)
+
+    def test_resume_is_warm_start_state(self):
+        prob = sample_problem(1, 16)
+        sol = solve_joint(prob)
+        state = sol.resume
+        assert isinstance(state, WarmStart)
+        assert state.a.shape == sol.a.shape
+        assert state.power.shape == sol.power.shape
+
+    def test_tuple_init_accepted(self):
+        prob = sample_problem(2, 16)
+        cold = solve_joint(prob)
+        warm = solve_joint(prob, init=(cold.a, cold.power))
+        assert_same_solution(warm, cold, tol=0.0)
+
+    def test_analytic_mode_ignores_init(self):
+        prob = sample_problem(3, 16)
+        cold = solve_joint(prob, power_solver="analytic")
+        warm = solve_joint(prob, power_solver="analytic", init=cold.resume)
+        assert_same_solution(warm, cold, tol=0.0)
+        assert int(cold.inner_iters) == int(warm.inner_iters) == 0
+
+    def test_jit_with_init(self):
+        prob = sample_problem(4, 24)
+        cold = solve_joint(prob)
+        warm = jax.jit(lambda p, s: solve_joint(p, init=s))(prob, cold.resume)
+        assert_same_solution(warm, cold, tol=1e-7)
+
+
+class TestWarmStartFused:
+    def test_solution_unchanged(self):
+        prob = sample_problem(5, 48)
+        cold = solve_joint_fused(prob, power_solver="dinkelbach")
+        warm = solve_joint_fused(prob, power_solver="dinkelbach",
+                                 init=cold.resume)
+        assert_same_solution(warm, cold, tol=0.0)
+        assert int(warm.inner_iters) < int(cold.inner_iters)
+
+    def test_chunked_warm_matches(self):
+        prob = sample_problem(6, 40)
+        cold = solve_joint_fused(prob, power_solver="dinkelbach")
+        warm = solve_joint_fused(prob, power_solver="dinkelbach",
+                                 chunk_elements=16, init=cold.resume)
+        assert_same_solution(warm, cold, tol=1e-6)
+        assert bool(warm.converged)
+
+    def test_fading_shapes(self):
+        prob = sample_problem(7, 12, with_fading=True, n_rounds=5)
+        cold = solve_joint_fused(prob, power_solver="dinkelbach")
+        warm = solve_joint_fused(prob, power_solver="dinkelbach",
+                                 init=cold.resume)
+        assert warm.a.shape == (12, 5)
+        assert_same_solution(warm, cold, tol=0.0)
+
+    def test_zero_init_rows_behave_cold(self):
+        """All-zero init is the 'no previous state' encoding the service
+        relies on for mixed warm/cold micro-batches."""
+        prob = sample_problem(8, 24)
+        cold = solve_joint_fused(prob, power_solver="dinkelbach")
+        zeros = WarmStart(a=jnp.zeros_like(cold.a),
+                          power=jnp.zeros_like(cold.power))
+        pseudo = solve_joint_fused(prob, power_solver="dinkelbach",
+                                   init=zeros)
+        assert_same_solution(pseudo, cold, tol=0.0)
+        assert int(pseudo.inner_iters) == int(cold.inner_iters)
+
+
+class TestWarmStartBatch:
+    def test_alternating_batch(self):
+        probs = [sample_problem(i, n) for i, n in enumerate([8, 24, 16])]
+        batch = stack_problems(probs)
+        cold = solve_joint_batch(batch)
+        warm = solve_joint_batch(batch, init=cold.resume)
+        assert_same_solution(warm, cold, tol=0.0)
+        assert (np.asarray(warm.inner_iters) <
+                np.asarray(cold.inner_iters)).all()
+
+    def test_fused_batch(self):
+        probs = [sample_problem(i, n) for i, n in enumerate([8, 24, 16])]
+        batch = stack_problems(probs)
+        cold = solve_joint_batch(batch, method="fused",
+                                 power_solver="dinkelbach")
+        warm = solve_joint_batch(batch, method="fused",
+                                 power_solver="dinkelbach", init=cold.resume)
+        assert_same_solution(warm, cold, tol=0.0)
+        assert int(np.asarray(warm.inner_iters)) < \
+            int(np.asarray(cold.inner_iters))
+
+    def test_direct_methods_reject_init(self):
+        batch = stack_problems([sample_problem(0, 8)])
+        sol = solve_joint_batch(batch)
+        for method in ("optimal", "kernel", "fused_kernel"):
+            with pytest.raises(ValueError, match="init"):
+                solve_joint_batch(batch, method=method, init=sol.resume)
+
+    def test_scheduler_threading(self):
+        prob = sample_problem(9, 16)
+        sch = ProbabilisticScheduler()
+        cold = sch.solve(prob)
+        warm_state = sch.precompute(prob, init=cold.resume)
+        np.testing.assert_array_equal(np.asarray(warm_state.a),
+                                      np.asarray(cold.a))
+        with pytest.raises(ValueError, match="optimal"):
+            ProbabilisticScheduler(solver="optimal").solve(
+                prob, init=cold.resume)
+
+
+class TestDriftingScenarios:
+    def test_gauss_markov_statistics(self):
+        g = gauss_markov_fading(0, 4000, 40, coherence=0.9)
+        assert g.shape == (4000, 40)
+        assert (g > 0).all()
+        # Exp(1) marginals: mean 1, var 1 (loose CLT bounds)
+        assert abs(g.mean() - 1.0) < 0.05
+        assert abs(g.var() - 1.0) < 0.15
+        # round-to-round power-gain correlation ~ coherence^2
+        flat = g.reshape(-1, 40)
+        c = np.corrcoef(flat[:, :-1].ravel(), flat[:, 1:].ravel())[0, 1]
+        assert abs(c - 0.81) < 0.05
+
+    def test_zero_coherence_is_iid(self):
+        g = gauss_markov_fading(1, 2000, 20, coherence=0.0)
+        flat = g.reshape(-1, 20)
+        c = np.corrcoef(flat[:, :-1].ravel(), flat[:, 1:].ravel())[0, 1]
+        assert abs(c) < 0.05
+
+    def test_coherence_validated(self):
+        with pytest.raises(ValueError, match="coherence"):
+            gauss_markov_fading(0, 4, 4, coherence=1.0)
+
+    def test_registry_entries(self):
+        prob = make_problem("drifting_metro", seed=0, n_devices=16,
+                            n_rounds=6)
+        assert prob.fading.shape == (16, 6)
+        big = make_problem("drifting_mega_fleet", seed=0, n_devices=64,
+                           n_rounds=3)
+        assert big.fading.shape == (64, 3)
+
+    def test_slice_round(self):
+        prob = make_problem("drifting_metro", seed=0, n_devices=8,
+                            n_rounds=4)
+        r2 = slice_round(prob, 2)
+        assert r2.fading.shape == (8, 1)
+        assert r2.n_rounds == 1
+        np.testing.assert_array_equal(np.asarray(r2.fading[:, 0]),
+                                      np.asarray(prob.fading[:, 2]))
+        static = dataclasses.replace(prob, fading=None)
+        with pytest.raises(ValueError, match="fading"):
+            slice_round(static, 0)
+
+
+class TestDriftingWarmStart:
+    """The acceptance criterion: warm-started solves on the
+    ``drifting_metro`` stream converge in measurably fewer (inner)
+    iterations than cold starts, with unchanged solutions."""
+
+    def test_iteration_drop_on_drift_stream(self):
+        prob = make_problem("drifting_metro", seed=0, n_devices=48,
+                            n_rounds=8)
+        state = None
+        warm_iters, cold_iters = [], []
+        for k in range(8):
+            pk = slice_round(prob, k)
+            cold = solve_joint_fused(pk, power_solver="dinkelbach")
+            cold_iters.append(int(cold.inner_iters))
+            if state is not None:
+                warm = solve_joint_fused(pk, power_solver="dinkelbach",
+                                         init=state)
+                warm_iters.append(int(warm.inner_iters))
+                assert_same_solution(warm, cold, tol=1e-6)
+            state = cold.resume
+        # "measurably fewer": at most half the cold count, every round
+        assert np.mean(warm_iters) <= 0.5 * np.mean(cold_iters[1:])
+        assert max(warm_iters) < min(cold_iters)
+
+    def test_solve_joint_drift_stream(self):
+        prob = make_problem("drifting_metro", seed=1, n_devices=32,
+                            n_rounds=4)
+        state = None
+        for k in range(4):
+            pk = slice_round(prob, k)
+            cold = solve_joint(pk)
+            if state is not None:
+                warm = solve_joint(pk, init=state)
+                assert_same_solution(warm, cold, tol=1e-6)
+                assert int(warm.inner_iters) < int(cold.inner_iters)
+            state = cold.resume
