@@ -44,6 +44,7 @@ TRACKED_PREFIXES = (
     "batch_solver_",
     "fused_solver_",
     "fleet_service_",
+    "closed_loop_",
     "solver_",
     "dinkelbach",
     "analytic_power",
@@ -65,6 +66,10 @@ SPEEDUP_FLOORS = {
     # on the drifting_metro stream.  Deterministic (same seeds => same
     # counts), so the ratio is machine-independent; measured 3.9x
     "fleet_service_cold_inner_iters": 2.5,
+    # closed loop: per-round warm-started service stream vs a per-round
+    # cold solve_joint loop on the same drifting trajectory, inner
+    # Algorithm-1 iterations per round.  Deterministic; measured 4.5x
+    "closed_loop_cold_inner_iters": 2.5,
 }
 
 _SPEEDUP_RE = re.compile(r"speedup=([0-9.]+)x")

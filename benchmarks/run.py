@@ -406,6 +406,79 @@ def bench_fleet_service_throughput(full: bool):
          f"speedup={ci / max(wi, 1e-9):.1f}x")
 
 
+# ------------------------------------------------------- closed loop
+
+def bench_closed_loop_throughput(full: bool):
+    """The drift-aware closed loop (``repro.fl.closed_loop``): per-round
+    control-plane solves on a Gauss-Markov channel, warm-started service
+    vs a per-round cold ``solve_joint`` loop.
+
+    * wall-clock rows (``closed_loop_control_*``) feed the same-runner
+      absolute gate;
+    * the inner-iteration pair (``closed_loop_{warm,cold}_inner_iters``)
+      is deterministic (same seeds => same counts), so its ``speedup=``
+      ratio is gated machine-independently — the closed loop's
+      drift-tracking claim;
+    * ``closed_loop_pipeline`` times the whole loop (control plane +
+      strategy suite + scan-fused training) end-to-end.
+    """
+    import functools
+
+    from repro.core import make_problem, slice_round, solve_joint
+    from repro.fl.closed_loop import (CLOSED_LOOP_STRATEGIES,
+                                      ClosedLoopConfig, run_closed_loop_grid,
+                                      solve_rounds)
+    from repro.serve import FleetControlService, ServiceConfig
+
+    n_dev, k_rounds = (48, 12) if full else (32, 8)
+    prob = make_problem("drifting_metro", seed=0, n_devices=n_dev,
+                        n_rounds=k_rounds)
+
+    def control_warm():
+        svc = FleetControlService(ServiceConfig(method="alternating",
+                                                power_solver="dinkelbach"))
+        return solve_rounds(prob, svc)
+
+    solve = jax.jit(functools.partial(solve_joint,
+                                      power_solver="dinkelbach"))
+
+    def control_cold_loop():
+        inner, out = 0, None
+        for k in range(k_rounds):
+            out = solve(slice_round(prob, k))
+            inner += int(out.inner_iters)
+        jax.block_until_ready(out.a)
+        return inner
+
+    control_warm()          # compile cold + warm init signatures
+    control_cold_loop()
+    us_warm = _timeit(control_warm, n=3, warmup=1)
+    us_cold = _timeit(control_cold_loop, n=3, warmup=1)
+    emit(f"closed_loop_control_warm_k{k_rounds}", us_warm,
+         f"rounds_per_sec={k_rounds / (us_warm / 1e6):.1f}")
+    emit(f"closed_loop_control_cold_k{k_rounds}", us_cold,
+         f"rounds_per_sec={k_rounds / (us_cold / 1e6):.1f}")
+
+    # deterministic drift-tracking claim: inner Algorithm-1 iterations
+    # per round, warm-started stream vs per-round cold solves
+    trace = control_warm()
+    wi = trace.inner_iters / k_rounds
+    ci = control_cold_loop() / k_rounds
+    emit("closed_loop_warm_inner_iters", wi,
+         f"warm_rounds={trace.warm_rounds}/{k_rounds}")
+    emit("closed_loop_cold_inner_iters", ci,
+         f"speedup={ci / max(wi, 1e-9):.1f}x")
+
+    # end-to-end: control plane + full strategy suite + scan-fused training
+    n_strat = len(CLOSED_LOOP_STRATEGIES)
+    cfg = ClosedLoopConfig(n_devices=16, n_rounds=6, n_train=512,
+                           n_test=128, eval_every=3)
+    us_pipe = _timeit(lambda: run_closed_loop_grid(cfg), n=3, warmup=1)
+    emit("closed_loop_pipeline", us_pipe,
+         f"strategies={n_strat} rounds={cfg.n_rounds} "
+         f"trajectories_per_sec={n_strat / (us_pipe / 1e6):.2f}")
+
+
 # ------------------------------------------------------------- roofline
 
 def bench_roofline(full: bool):
@@ -435,6 +508,7 @@ BENCHES = {
     "fl_round": bench_fl_round,
     "fl_sweep_scaling": bench_fl_sweep_scaling,
     "fleet_service_throughput": bench_fleet_service_throughput,
+    "closed_loop_throughput": bench_closed_loop_throughput,
     "roofline": bench_roofline,
 }
 

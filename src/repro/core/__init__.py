@@ -27,6 +27,8 @@ from repro.core.schedulers import (
     SCHEDULERS,
     DeterministicScheduler,
     EquallyWeightedScheduler,
+    GreedyChannelScheduler,
+    LyapunovScheduler,
     ParticipationDraw,
     ProbabilisticScheduler,
     SchedulerState,
@@ -57,5 +59,6 @@ __all__ = [
     "fused_fixed_point", "fused_fixed_point_flat",
     "ParticipationDraw", "SchedulerState",
     "ProbabilisticScheduler", "DeterministicScheduler", "UniformScheduler",
-    "EquallyWeightedScheduler", "SCHEDULERS", "make_scheduler",
+    "EquallyWeightedScheduler", "GreedyChannelScheduler", "LyapunovScheduler",
+    "SCHEDULERS", "make_scheduler",
 ]

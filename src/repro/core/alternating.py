@@ -133,7 +133,14 @@ def _init_state(problem: WirelessFLProblem, shape) -> tuple[jax.Array, jax.Array
 
 def _solution_shape(problem: WirelessFLProblem, per_round: bool):
     n = problem.n_devices
-    if per_round and (problem.fading is not None):
+    if problem.fading is not None:
+        if not per_round:
+            # a 1-d iterate against the [N, K] path gain only "works"
+            # when K == N, and is then silently wrong — refuse instead
+            raise ValueError(
+                "per_round=False is meaningless on a fading problem: the "
+                "closed forms are separable per (i, k), so solve with "
+                "per_round=True (solution shape [N, K])")
         return (n, problem.n_rounds)
     return (n,)
 
@@ -568,9 +575,8 @@ def solve_joint_fused(problem: WirelessFLProblem,
     above it; the <= 1e-5 agreement guarantee covers the corrected
     formula only.
     """
-    if problem.fading is not None and not per_round:
-        raise ValueError("per_round=False is meaningless with fading: the "
-                         "element set is per (device, round)")
+    # per_round=False on a fading problem is rejected by _solution_shape
+    # (via problem_elements), one message for every solver entry point
     el = problem_elements(problem, per_round)
     shape = el.pg.shape
     if init is not None:

@@ -23,19 +23,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.alternating import JointSolution, _solution_shape
-from repro.core.problem import WirelessFLProblem
+from repro.core.problem import WirelessFLProblem, _bcast_like
 
 
 def _feasible(problem: WirelessFLProblem, a: jax.Array) -> jax.Array:
-    """F(a) above, elementwise; a=0 is always feasible."""
+    """F(a) above, elementwise; a=0 is always feasible.
+
+    Ranks follow the ``problem.py`` contract: ``p_min`` takes the path
+    gain's rank, so every 1-d operand (including a 1-d ``a`` on a fading
+    problem) is broadcast up to it.
+    """
     p_min = jnp.clip(problem.p_min(a), 0.0, None)
-    ec = problem.compute_energy()
-    emax = problem.energy_budget_j
-    if a.ndim > 1:
-        ec, emax = ec[:, None], emax[:, None]
+    rank = max(a.ndim, p_min.ndim)
+    av = _bcast_like(a, rank)
+    ec = _bcast_like(problem.compute_energy(), rank)
+    emax = _bcast_like(problem.energy_budget_j, rank)
     power_ok = p_min <= problem.p_max * (1 + 1e-9)
-    energy_ok = problem.tau_th * p_min + a * ec <= emax * (1 + 1e-9)
-    return (power_ok & energy_ok) | (a <= 0)
+    energy_ok = problem.tau_th * p_min + av * ec <= emax * (1 + 1e-9)
+    return (power_ok & energy_ok) | (av <= 0)
 
 
 def solve_joint_optimal(problem: WirelessFLProblem,

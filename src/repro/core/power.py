@@ -39,7 +39,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import LN2, WirelessFLProblem
+from repro.core.problem import LN2, WirelessFLProblem, _bcast_like
 
 _A_FLOOR = 1e-12   # guards the a -> 0 division in P*(lambda)
 
@@ -168,9 +168,21 @@ def element_warm_lambda(a0, p0, pg, bw, *, s_bits: float,
 # -------------------------------------------------------- problem level
 
 def _element_operands(problem: WirelessFLProblem, a: jax.Array):
+    """``(a, pg, bw)`` broadcast to a common element rank.
+
+    A 1-d ``a`` on a fading problem is materialised to the path gain's
+    ``[N, K]`` shape ("same probability, each round's channel" — the
+    ``problem.py`` broadcasting contract) so the element-level while
+    loops carry shape-stable state; ``bw`` gains a trailing round axis
+    whenever any operand is per-round.
+    """
     pg = problem._pg(a)
-    bw = problem.bandwidth_hz if a.ndim == 1 else problem.bandwidth_hz[:, None]
-    return pg, bw
+    bw = problem.bandwidth_hz
+    if max(a.ndim, pg.ndim) > bw.ndim:
+        bw = bw[:, None]
+    if a.ndim < pg.ndim:
+        a = jnp.broadcast_to(a[:, None], pg.shape)
+    return a, pg, bw
 
 
 def dinkelbach_power(problem: WirelessFLProblem,
@@ -180,7 +192,7 @@ def dinkelbach_power(problem: WirelessFLProblem,
                      eps: float = 1e-6,
                      max_iters: int = 64) -> PowerSolution:
     """Vectorised Algorithm 1 over every (i, k) subproblem simultaneously."""
-    pg, bw = _element_operands(problem, a)
+    a, pg, bw = _element_operands(problem, a)
     p, lam, iters, feasible = dinkelbach_power_elements(
         a, pg, bw, s_bits=problem.grad_size_bits, tau=problem.tau_th,
         p_max=problem.p_max, lam0=lam0, eps=eps, max_iters=max_iters)
@@ -190,7 +202,7 @@ def dinkelbach_power(problem: WirelessFLProblem,
 def analytic_power(problem: WirelessFLProblem, a: jax.Array) -> PowerSolution:
     """Closed-form optimum of (9): the ratio is increasing in P, so
     P* = clip(P^min(a), 0, P^max).  Beyond-paper solver fast path."""
-    pg, bw = _element_operands(problem, a)
+    a, pg, bw = _element_operands(problem, a)
     p, lam, feasible = analytic_power_elements(
         a, pg, bw, s_bits=problem.grad_size_bits, tau=problem.tau_th,
         p_max=problem.p_max)
@@ -198,9 +210,12 @@ def analytic_power(problem: WirelessFLProblem, a: jax.Array) -> PowerSolution:
 
 
 def energy_bound_ok(problem: WirelessFLProblem, a: jax.Array, sol: PowerSolution) -> jax.Array:
-    """Algorithm 2 line 4: is objective (9a) <= H_ik = E^max - a E^c (eq. 10)?"""
-    ec = problem.compute_energy()
-    emax = problem.energy_budget_j
-    if a.ndim > 1:
-        ec, emax = ec[:, None], emax[:, None]
-    return energy_gate_elements(a, sol.lam, emax, ec)
+    """Algorithm 2 line 4: is objective (9a) <= H_ik = E^max - a E^c (eq. 10)?
+
+    Ranks follow the ``problem.py`` contract: a 1-d ``a`` against a
+    per-round ``sol.lam`` (fading problem) broadcasts across rounds.
+    """
+    rank = max(a.ndim, jnp.ndim(sol.lam))
+    ec = _bcast_like(problem.compute_energy(), rank)
+    emax = _bcast_like(problem.energy_budget_j, rank)
+    return energy_gate_elements(_bcast_like(a, rank), sol.lam, emax, ec)

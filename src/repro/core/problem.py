@@ -11,6 +11,28 @@ All per-device quantities are jnp arrays of shape ``[N]`` (or ``[N, K]``
 when per-round fading is enabled — a beyond-paper generalisation the
 closed forms support unchanged because the problem is separable per
 ``(i, k)``).
+
+Broadcasting contract (``[N]`` vs ``[N, K]``)
+---------------------------------------------
+
+Every method taking per-device decision variables (``a``, ``power``)
+accepts either rank on any problem, and broadcasts all operands to the
+*highest* rank present — the path gain's rank on a fading problem:
+
+* 1-d input on a fading problem means "the same value, evaluated at each
+  round's channel draw": the result has shape ``[N, K]``, column k equal
+  to the call with that column explicitly (bit-for-bit — see
+  ``tests/test_problem_broadcast.py``).
+* 2-d input on a static problem broadcasts the per-device constants
+  (``bandwidth_hz``, ``energy_budget_j``, ...) across the trailing round
+  axis; the result keeps the input's ``[N, K]`` shape.
+* matching ranks pass through elementwise.
+
+Internally the rule is: broadcast 1-d operands with ``x[:, None]``
+against the ``[N, K]`` path gain, never the reverse — mixing a raw
+``[N]`` with an ``[N, K]`` array only "works" when K == N (and is then
+silently wrong).  ``core.power`` / ``core.selection`` follow the same
+contract through ``_pg`` / ``_bcast_like``.
 """
 from __future__ import annotations
 
@@ -114,14 +136,21 @@ class WirelessFLProblem:
 
         P^min_ik = (2^{a S / (B_i tau)} - 1) / path_gain  — below this the
         expected transmission time a*T exceeds tau^th.
+
+        A 1-d ``a`` on a fading ([N, K]) problem broadcasts across rounds
+        (same probability, each round's channel), exactly like ``rate``.
         """
-        bw = self.bandwidth_hz if a.ndim == 1 else self.bandwidth_hz[:, None]
-        exponent = a * self.grad_size_bits / (bw * self.tau_th)
+        pg = self._pg(a)
+        av = a if a.ndim >= pg.ndim else a[:, None]
+        bw = self.bandwidth_hz
+        if max(av.ndim, pg.ndim) > bw.ndim:
+            bw = bw[:, None]
+        exponent = av * self.grad_size_bits / (bw * self.tau_th)
         # exp2 overflows fast; clamp exponent so infeasible entries give a
         # huge-but-finite P^min (> p_max), which downstream logic treats as
         # "infeasible at this a" rather than producing NaNs.
         exponent = jnp.minimum(exponent, 120.0)
-        return jnp.expm1(exponent * LN2) / self._pg(a)
+        return jnp.expm1(exponent * LN2) / pg
 
     def objective(self, a: jax.Array) -> jax.Array:
         """Weighted sum of selection probabilities (7a) for one round."""
@@ -130,18 +159,30 @@ class WirelessFLProblem:
 
     def constraints_satisfied(self, a: jax.Array, power: jax.Array,
                               rtol: float = 1e-4) -> jax.Array:
-        """Boolean feasibility of (7b)-(7e) per element (with tolerance)."""
+        """Boolean feasibility of (7b)-(7e) per element (with tolerance).
+
+        ``a`` and ``power`` may be ``[N]`` or ``[N, K]`` independently;
+        1-d operands broadcast across the fading rounds (module
+        docstring contract) and the result takes the highest rank.
+        """
         t = self.tx_time(power)
-        energy_ok = a * (power * t + _bcast(self.compute_energy(), a)) \
-            <= _bcast(self.energy_budget_j, a) * (1 + rtol) + 1e-12
-        time_ok = a * t <= self.tau_th * (1 + rtol)
-        p_ok = (power >= -1e-12) & (power <= self.p_max * (1 + rtol))
-        a_ok = (a >= -1e-12) & (a <= 1 + rtol)
+        rank = max(a.ndim, power.ndim, t.ndim)
+        av = _bcast_like(a, rank)
+        pv = _bcast_like(power, rank)
+        tv = _bcast_like(t, rank)
+        eu = pv * tv                        # E^u = P T_ik(P), as upload_energy
+        energy_ok = av * (eu + _bcast_like(self.compute_energy(), rank)) \
+            <= _bcast_like(self.energy_budget_j, rank) * (1 + rtol) + 1e-12
+        time_ok = av * tv <= self.tau_th * (1 + rtol)
+        p_ok = (pv >= -1e-12) & (pv <= self.p_max * (1 + rtol))
+        a_ok = (av >= -1e-12) & (av <= 1 + rtol)
         return energy_ok & time_ok & p_ok & a_ok
 
 
-def _bcast(x: jax.Array, like: jax.Array) -> jax.Array:
-    return x if like.ndim == 1 else x[:, None]
+def _bcast_like(x: jax.Array, rank: int) -> jax.Array:
+    """Broadcast a per-device ``[N]`` vector to ``[N, 1]`` when the
+    surrounding expression is per-round ``[N, K]`` (rank 2)."""
+    return x if x.ndim >= rank else x[:, None]
 
 
 def sample_problem(rng: np.random.Generator | int,

@@ -1,4 +1,4 @@
-"""Client-selection strategies: the paper's approach + its three benchmarks.
+"""Client-selection strategies: the paper's approach + benchmark schedulers.
 
 Every scheduler exposes:
 
@@ -16,8 +16,22 @@ server update (eq. 4).  Schedulers differ in:
   P^max; ignores the wireless/energy constraints.
 * **equally_weighted** [Nishio & Yonetani]: binary selection, equal
   objective weights and equal aggregation weights.
+* **greedy_channel**: per-round top-M devices by instantaneous channel
+  gain at the minimum tau-feasible power — the channel-aware baseline
+  every wireless-FL comparison fields (cf. Yang et al., energy-efficient
+  FL over wireless networks).
+* **lyapunov**: virtual-queue drift-plus-penalty scheduling in the
+  spirit of Perazzone et al. (communication-efficient device scheduling
+  via stochastic optimisation): a per-device energy-budget queue
+  Q_i(k+1) = max(Q_i(k) + m_i E_ik - E^max_i, 0) throttles devices whose
+  realised energy overshoots their per-round budget, and round k selects
+  the devices whose utility V w_i outweighs the queue-weighted energy
+  price Q_i(k) E_ik.
 
-All schedulers are pure-JAX and jit/vmap friendly.
+All schedulers are pure-JAX and jit/vmap friendly; the channel-aware pair
+(greedy_channel, lyapunov) produce per-round ``[N, K]`` states on fading
+problems, which both engines and the closed-loop pipeline
+(``repro.fl.closed_loop``) consume round-by-round.
 """
 from __future__ import annotations
 
@@ -149,7 +163,14 @@ class ProbabilisticScheduler:
         return jax.vmap(lambda s, kk: self.sample(s, kk, k))(state, keys)
 
 
-def _round_preserving_count(a: jax.Array) -> jax.Array:
+def _top_m_binary(score: jax.Array, m: jax.Array) -> jax.Array:
+    """Binary [N] mask selecting the ``m`` highest-scoring devices."""
+    order = jnp.argsort(-score)
+    ranks = jnp.argsort(order)
+    return (ranks < m).astype(score.dtype)
+
+
+def _round_preserving_count(a: jax.Array, per_round: bool = False) -> jax.Array:
     """Binarise probabilities keeping the expected participant count.
 
     The paper rounds a* "up or down" but also states the expected number of
@@ -157,25 +178,36 @@ def _round_preserving_count(a: jax.Array) -> jax.Array:
     ceil(sum a) highest-probability devices are selected (a plain 0.5
     threshold would select nobody here, since per-element a* rarely exceeds
     ~0.3 under the paper's wireless constants). See DESIGN.md §1.
+
+    For a per-round ``[N, K]`` input the default keeps the paper's static
+    reading (round 0's selection broadcast across rounds);
+    ``per_round=True`` re-binarises each round's column independently —
+    the drift-tracking variant the closed-loop pipeline uses.
     """
-    flat = a if a.ndim == 1 else a[:, 0]
-    k = jnp.clip(jnp.round(jnp.sum(flat)), 1, flat.shape[0]).astype(jnp.int32)
-    order = jnp.argsort(-flat)
-    ranks = jnp.argsort(order)
-    sel = (ranks < k).astype(a.dtype)
-    return sel if a.ndim == 1 else jnp.broadcast_to(sel[:, None], a.shape)
+    def one_round(col: jax.Array) -> jax.Array:
+        k = jnp.clip(jnp.round(jnp.sum(col)), 1, col.shape[0]).astype(jnp.int32)
+        return _top_m_binary(col, k)
+
+    if a.ndim == 1:
+        return one_round(a)
+    if per_round:
+        return jax.vmap(one_round, in_axes=1, out_axes=1)(a)
+    return jnp.broadcast_to(one_round(a[:, 0])[:, None], a.shape)
 
 
 @dataclasses.dataclass(frozen=True)
 class DeterministicScheduler:
     """Rounded binary version of the probabilistic solution (paper Sec. V),
-    expected-count preserving."""
+    expected-count preserving.  ``per_round=True`` re-binarises every
+    fading round independently (drift-tracking top-k) instead of
+    broadcasting round 0's selection."""
 
     inner: ProbabilisticScheduler = ProbabilisticScheduler()
+    per_round: bool = False
 
     def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
         sol = self.inner.solve(problem)
-        a_bin = _round_preserving_count(sol.a)
+        a_bin = _round_preserving_count(sol.a, per_round=self.per_round)
         return SchedulerState(a=a_bin, power=sol.power,
                               agg_weights=_data_weights(problem))
 
@@ -229,11 +261,120 @@ class EquallyWeightedScheduler:
                                  agg_weights=state.agg_weights, probs=a)
 
 
+def _tau_feasible_power(problem: WirelessFLProblem) -> jax.Array:
+    """Minimum power transmitting within tau at full participation:
+    clip(P^min(a=1), 0, P^max) — [N], or [N, K] on a fading problem
+    (each round's channel).  Devices whose P^min(1) exceeds P^max are
+    clamped (they violate tau; channel-aware selection avoids them)."""
+    ones = jnp.ones((problem.n_devices,), jnp.float32)
+    return jnp.clip(problem.p_min(ones), 0.0, problem.p_max)
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedyChannelScheduler:
+    """Channel-aware greedy: every round, the M devices with the best
+    instantaneous channel (highest path gain) transmit at the minimum
+    tau-feasible power.  The standard opportunistic baseline (cf. Yang et
+    al., energy-efficient FL): it tracks the fading but ignores energy
+    budgets and data weights."""
+
+    m: int = 10
+
+    def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
+        gain = problem.path_gain()                  # [N] or [N, K]
+        power = _tau_feasible_power(problem)
+        m = jnp.int32(min(self.m, problem.n_devices))
+        if gain.ndim == 1:
+            a = _top_m_binary(gain, m)
+        else:
+            a = jax.vmap(_top_m_binary, in_axes=(1, None),
+                         out_axes=1)(gain, m)
+        return SchedulerState(a=a.astype(jnp.float32), power=power,
+                              agg_weights=_data_weights(problem))
+
+    def sample(self, state: SchedulerState, key: jax.Array, k: int = 0) -> ParticipationDraw:
+        a = _round_slice(state.a, k)
+        return ParticipationDraw(mask=a > 0, power=_round_slice(state.power, k),
+                                 agg_weights=state.agg_weights, probs=a)
+
+
+@dataclasses.dataclass(frozen=True)
+class LyapunovScheduler:
+    """Virtual-queue drift-plus-penalty scheduler (cf. Perazzone et al.,
+    arXiv:2201.07912).
+
+    Each device carries an energy-budget virtual queue
+
+        Q_i(k+1) = max(Q_i(k) + m_i(k) E_ik - E^max_i, 0),   Q_i(0) = 0,
+
+    where ``E_ik`` is the device's round-k energy at the minimum
+    tau-feasible power and ``E^max_i`` its per-round budget.  Round k
+    greedily solves the drift-plus-penalty subproblem
+    ``max sum_i (V w_i - Q_i(k) E_ik) m_i`` over binary masks: device i
+    participates iff its utility ``V w_i`` outweighs the queue-weighted
+    energy price ``Q_i(k) E_ik``.  Devices that overdraw their budget
+    accumulate queue and are throttled, so long-run average energy per
+    round approaches the budget — stochastic-constraint scheduling,
+    where the paper's scheme enforces (7b) per round.
+
+    ``v`` is the standard Lyapunov utility/backlog trade-off knob; the
+    queue recursion is deterministic given the channel trajectory, so the
+    whole schedule precomputes to a per-round binary ``[N, K]`` state.
+    """
+
+    v: float = 1.0
+    n_rounds: Optional[int] = None    # static problems: schedule length
+
+    def _energy_table(self, problem: WirelessFLProblem
+                      ) -> tuple[jax.Array, jax.Array]:
+        """(power, e_rounds [N, K]): per-round full-participation energy."""
+        power = _tau_feasible_power(problem)
+        e = problem.round_energy(power)           # [N] or [N, K]
+        if e.ndim == 1:
+            k = self.n_rounds if self.n_rounds else max(problem.n_rounds, 1)
+            e = jnp.broadcast_to(e[:, None], (e.shape[0], k))
+        return power, e
+
+    def queue_trajectory(self, problem: WirelessFLProblem) -> jax.Array:
+        """Virtual-queue path [K+1, N] (Q(0) = 0 first row) — diagnostics
+        and test surface for the queue stability invariants."""
+        _, e_rounds = self._energy_table(problem)
+        _, qs = jax.lax.scan(self._step(problem), self._q0(problem),
+                             e_rounds.T)
+        return jnp.concatenate([self._q0(problem)[None], qs[0]], axis=0)
+
+    def _q0(self, problem: WirelessFLProblem) -> jax.Array:
+        return jnp.zeros((problem.n_devices,), jnp.float32)
+
+    def _step(self, problem: WirelessFLProblem):
+        w, emax = problem.weights, problem.energy_budget_j
+
+        def body(q, e_k):
+            sel = self.v * w > q * e_k
+            q_new = jnp.maximum(q + jnp.where(sel, e_k, 0.0) - emax, 0.0)
+            return q_new, (q_new, sel)
+        return body
+
+    def precompute(self, problem: WirelessFLProblem) -> SchedulerState:
+        power, e_rounds = self._energy_table(problem)
+        _, (_, sels) = jax.lax.scan(self._step(problem), self._q0(problem),
+                                    e_rounds.T)       # sels [K, N]
+        return SchedulerState(a=sels.T.astype(jnp.float32), power=power,
+                              agg_weights=_data_weights(problem))
+
+    def sample(self, state: SchedulerState, key: jax.Array, k: int = 0) -> ParticipationDraw:
+        a = _round_slice(state.a, k)
+        return ParticipationDraw(mask=a > 0, power=_round_slice(state.power, k),
+                                 agg_weights=state.agg_weights, probs=a)
+
+
 SCHEDULERS = {
     "probabilistic": ProbabilisticScheduler,
     "deterministic": DeterministicScheduler,
     "uniform": UniformScheduler,
     "equally_weighted": EquallyWeightedScheduler,
+    "greedy_channel": GreedyChannelScheduler,
+    "lyapunov": LyapunovScheduler,
 }
 
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import WirelessFLProblem
+from repro.core.problem import WirelessFLProblem, _bcast_like
 
 
 def selection_update_elements(power, tx_time, emax, ec, *, tau: float,
@@ -47,12 +47,14 @@ def optimal_selection(problem: WirelessFLProblem,
                       power: jax.Array,
                       *,
                       faithful_eq13_typo: bool = False) -> jax.Array:
-    """a*_ik per eq. (13). ``power`` has shape [N] or [N, K]."""
+    """a*_ik per eq. (13). ``power`` has shape [N] or [N, K]; a 1-d
+    ``power`` on a fading problem broadcasts across rounds (the
+    ``problem.py`` contract) and yields an [N, K] result."""
     t = problem.tx_time(power)
-    ec = problem.compute_energy()
-    emax = problem.energy_budget_j
-    if power.ndim > 1:
-        ec, emax = ec[:, None], emax[:, None]
-    return selection_update_elements(power, t, emax, ec, tau=problem.tau_th,
+    rank = max(power.ndim, t.ndim)
+    ec = _bcast_like(problem.compute_energy(), rank)
+    emax = _bcast_like(problem.energy_budget_j, rank)
+    return selection_update_elements(_bcast_like(power, rank), t, emax, ec,
+                                     tau=problem.tau_th,
                                      s_bits=problem.grad_size_bits,
                                      faithful_eq13_typo=faithful_eq13_typo)

@@ -56,6 +56,8 @@ from repro.core.problem import WirelessFLProblem
 from repro.core.schedulers import (
     DeterministicScheduler,
     EquallyWeightedScheduler,
+    GreedyChannelScheduler,
+    LyapunovScheduler,
     ProbabilisticScheduler,
     SchedulerState,
     UniformScheduler,
@@ -165,13 +167,15 @@ def _scheduler_mode(scheduler) -> tuple[int, int, bool]:
     """(mode, m, unbiased) encoding of a scheduler's sampling behaviour."""
     if isinstance(scheduler, ProbabilisticScheduler):
         return MODE_BERNOULLI, 0, bool(scheduler.unbiased_aggregation)
-    if isinstance(scheduler, (DeterministicScheduler, EquallyWeightedScheduler)):
+    if isinstance(scheduler, (DeterministicScheduler, EquallyWeightedScheduler,
+                              GreedyChannelScheduler, LyapunovScheduler)):
         return MODE_FIXED, 0, False
     if isinstance(scheduler, UniformScheduler):
         return MODE_UNIFORM, int(scheduler.m), False
     raise TypeError(
         f"cannot fuse scheduler {type(scheduler).__name__}; expected one of "
-        "Probabilistic/Deterministic/Uniform/EquallyWeighted")
+        "Probabilistic/Deterministic/Uniform/EquallyWeighted/"
+        "GreedyChannel/Lyapunov")
 
 
 def _per_round(x: np.ndarray, n_rounds: int, name: str) -> np.ndarray:

@@ -1,0 +1,200 @@
+"""Regression suite for the [N] / [N, K] broadcasting contract.
+
+Every ``WirelessFLProblem`` method (and the problem-level power/selection
+shims) used to crash with ``Incompatible shapes for broadcasting:
+[(N,), (N, K)]`` for 1-d inputs on a fading problem with K != N — the
+``[N]`` numerator was mixed with the ``[N, K]`` path gain, which only
+"worked" (silently wrongly) when K == N.  These tests pin the contract of
+``problem.py``'s module docstring on a fading problem with K != N:
+
+* every method accepts all four (a-rank x power-rank) combinations;
+* a 1-d input equals its column-broadcast 2-d call **bit-for-bit**
+  (regression cases + a hypothesis property over random problems);
+* the 2-d result's column k equals the per-round ``slice_round`` call.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import slice_round
+from repro.core.optimal import _feasible
+from repro.core.power import analytic_power, dinkelbach_power, energy_bound_ok
+from repro.core.scenarios import make_problem
+from repro.core.selection import optimal_selection
+
+N, K = 12, 5      # K != N everywhere: equal sizes would mask rank bugs
+
+
+@pytest.fixture(scope="module")
+def fading_problem():
+    return make_problem("drifting_metro", seed=3, n_devices=N, n_rounds=K)
+
+
+def _ranked(x_1d, ndim):
+    """The 1-d vector, or its column-broadcast [N, K] copy."""
+    x = jnp.asarray(x_1d, jnp.float32)
+    return x if ndim == 1 else jnp.broadcast_to(x[:, None], (N, K))
+
+
+# method name -> callable(problem, a, power); one entry per public
+# surface that mixes decision variables with the [N, K] path gain
+METHODS = {
+    "rate": lambda pb, a, p: pb.rate(p),
+    "tx_time": lambda pb, a, p: pb.tx_time(p),
+    "upload_energy": lambda pb, a, p: pb.upload_energy(p),
+    "round_energy": lambda pb, a, p: pb.round_energy(p),
+    "p_min": lambda pb, a, p: pb.p_min(a),
+    "constraints_satisfied": lambda pb, a, p: pb.constraints_satisfied(a, p),
+    "analytic_power": lambda pb, a, p: analytic_power(pb, a).power,
+    "analytic_lam": lambda pb, a, p: analytic_power(pb, a).lam,
+    "dinkelbach_power": lambda pb, a, p: dinkelbach_power(pb, a).power,
+    "optimal_selection": lambda pb, a, p: optimal_selection(pb, p),
+    "energy_bound_ok": lambda pb, a, p: energy_bound_ok(
+        pb, a, analytic_power(pb, a)),
+    "optimal_feasible": lambda pb, a, p: _feasible(pb, a),
+}
+
+A_1D = np.linspace(0.02, 0.6, N).astype(np.float32)
+P_1D = np.linspace(0.05, 0.9, N).astype(np.float32)
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+@pytest.mark.parametrize("a_ndim,p_ndim", [(1, 1), (1, 2), (2, 1), (2, 2)])
+def test_rank_combinations(fading_problem, method, a_ndim, p_ndim):
+    """All four input-rank combinations work on fading K != N and agree
+    bit-for-bit: 1-d means "same value at each round's channel"."""
+    fn = METHODS[method]
+    out = fn(fading_problem, _ranked(A_1D, a_ndim), _ranked(P_1D, p_ndim))
+    ref = fn(fading_problem, _ranked(A_1D, 2), _ranked(P_1D, 2))
+    assert out.shape == (N, K)
+    assert ref.shape == (N, K)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_columns_match_sliced_rounds(fading_problem, method):
+    """Column k of the broadcast result equals the standalone 1-round
+    problem for round k (``slice_round``)."""
+    fn = METHODS[method]
+    full = np.asarray(fn(fading_problem, jnp.asarray(A_1D),
+                         jnp.asarray(P_1D)))
+    for k in (0, K - 1):
+        sub = slice_round(fading_problem, k)
+        col = np.asarray(fn(sub, jnp.asarray(A_1D), jnp.asarray(P_1D)))
+        assert col.shape == (N, 1)
+        np.testing.assert_array_equal(full[:, k], col[:, 0])
+
+
+def test_static_problem_ranks_unchanged():
+    """On a static channel 1-d stays 1-d and 2-d inputs broadcast the
+    per-device constants across rounds (no behaviour change)."""
+    prob = make_problem("paper_static", seed=0, n_devices=N)
+    a1, p1 = jnp.asarray(A_1D), jnp.asarray(P_1D)
+    assert prob.p_min(a1).shape == (N,)
+    assert prob.constraints_satisfied(a1, p1).shape == (N,)
+    a2 = jnp.broadcast_to(a1[:, None], (N, K))
+    p2 = jnp.broadcast_to(p1[:, None], (N, K))
+    out = prob.constraints_satisfied(a2, p2)
+    assert out.shape == (N, K)
+    np.testing.assert_array_equal(
+        np.asarray(out)[:, 0], np.asarray(prob.constraints_satisfied(a1, p1)))
+
+
+def test_objective_reduces_not_broadcasts(fading_problem):
+    """``objective`` is the one non-elementwise method: it *reduces*
+    (7a)'s weighted sum, so a 2-d input sums over rounds too (the global
+    Algorithm-2 stopping statistic) — K times the 1-d call for a
+    round-constant a.  Documented here so the contract's scope is pinned."""
+    a1 = jnp.asarray(A_1D)
+    a2 = jnp.broadcast_to(a1[:, None], (N, K))
+    o1 = float(fading_problem.objective(a1))
+    o2 = float(fading_problem.objective(a2))
+    assert o2 == pytest.approx(K * o1, rel=1e-6)
+
+
+def test_issue_repro_snippets():
+    """The literal crash repros from ISSUE 5."""
+    prob = make_problem("drifting_metro", seed=0, n_devices=N, n_rounds=K)
+    a = jnp.full((N,), 0.1)
+    power = jnp.full((N,), 0.5)
+    assert prob.p_min(a).shape == (N, K)
+    assert prob.constraints_satisfied(a, power).shape == (N, K)
+
+
+def test_per_round_false_rejected_on_fading(fading_problem):
+    """A 1-d solve on a fading problem is ill-defined — assert-with-message
+    instead of a silent K == N dependence."""
+    from repro.core import solve_joint, solve_joint_optimal
+
+    with pytest.raises(ValueError, match="per_round"):
+        solve_joint(fading_problem, per_round=False)
+    with pytest.raises(ValueError, match="per_round"):
+        solve_joint_optimal(fading_problem, per_round=False)
+
+
+# --------------------------------------------------- hypothesis property
+# guarded import (not importorskip) so the regression tests above still
+# run where hypothesis is unavailable; CI installs it via
+# requirements-dev.txt and runs the properties
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # pragma: no cover - exercised per environment
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def fading_case(draw):
+        seed = draw(st.integers(0, 2 ** 31 - 1))
+        # fixed (N, K), N != K: arbitrary sizes would recompile per example
+        prob = make_problem("drifting_metro", seed=seed, n_devices=8,
+                            n_rounds=3,
+                            coherence=draw(st.sampled_from([0.0, 0.5, 0.9])))
+        rng = np.random.default_rng(seed)
+        a = rng.uniform(0.0, 1.0, 8).astype(np.float32)
+        p = rng.uniform(1e-3, 1.0, 8).astype(np.float32)
+        return prob, a, p
+
+    @given(case=fading_case())
+    @settings(max_examples=25, deadline=None)
+    def test_1d_equals_column_broadcast_bitwise(case):
+        """Property: for every method, the 1-d call equals the explicit
+        column-broadcast 2-d call bit-for-bit on random fading problems."""
+        prob, a, p = case
+        n, k = prob.fading.shape
+        a2 = jnp.broadcast_to(jnp.asarray(a)[:, None], (n, k))
+        p2 = jnp.broadcast_to(jnp.asarray(p)[:, None], (n, k))
+        for name, fn in METHODS.items():
+            out = np.asarray(fn(prob, jnp.asarray(a), jnp.asarray(p)))
+            ref = np.asarray(fn(prob, a2, p2))
+            np.testing.assert_array_equal(out, ref, err_msg=name)
+
+    @given(case=fading_case())
+    @settings(max_examples=15, deadline=None)
+    def test_constraints_consistent_with_energy_terms(case):
+        """constraints_satisfied's energy term routes through
+        upload_energy: a solution reported feasible satisfies eq. (7b)
+        recomputed by hand."""
+        prob, a, p = case
+        ok = np.asarray(prob.constraints_satisfied(jnp.asarray(a),
+                                                   jnp.asarray(p)))
+        eu = np.asarray(prob.upload_energy(jnp.asarray(p)))
+        ec = np.asarray(prob.compute_energy())[:, None]
+        emax = np.broadcast_to(np.asarray(prob.energy_budget_j)[:, None],
+                               eu.shape)
+        lhs = a[:, None] * (eu + ec)
+        # a reported-feasible element can never violate the hand-computed
+        # (7b) bound (the other three constraints are AND-ed on top)
+        violated_energy = lhs > emax * (1 + 1e-4) + 1e-9
+        assert not (ok & violated_energy).any()
+
+
+def test_broadcast_sliced_equals_fullwidth_constraints(fading_problem):
+    """Mixed ranks: [N] a against [N, K] power and vice versa."""
+    a1 = jnp.asarray(A_1D)
+    p2 = jnp.broadcast_to(jnp.asarray(P_1D)[:, None], (N, K))
+    assert fading_problem.constraints_satisfied(a1, p2).shape == (N, K)
+    a2 = jnp.broadcast_to(a1[:, None], (N, K))
+    p1 = jnp.asarray(P_1D)
+    assert fading_problem.constraints_satisfied(a2, p1).shape == (N, K)
