@@ -406,6 +406,79 @@ def bench_fleet_service_throughput(full: bool):
          f"speedup={ci / max(wi, 1e-9):.1f}x")
 
 
+def bench_fleet_service_openloop(full: bool):
+    """The open-loop control plane under seeded arrival traffic — the
+    serving claims of ``docs/serving.md`` measured end-to-end:
+
+    * ``_sustained``: Poisson arrivals at 0.7x the *measured* full-batch
+      capacity; ``throughput_ratio`` (sustained/offered) is dimensionless
+      and gated machine-independently by ``compare.py``;
+    * ``_latency``: p50/p99 request latency and the deadline-miss rate,
+      with deadlines expressed in units of the measured batch cost
+      (``p99_over_deadline`` therefore transfers across machines — the
+      gated p99 ceiling);
+    * ``_warmup``: AOT warmup cost per bucket and ``first_over_p50``,
+      the no-trace-spike acceptance figure (first post-warmup request vs
+      steady-state p50);
+    * ``_bursty``: ON/OFF bursts over drifted + stale-tolerant cells;
+      ``preemptions`` counts the priority lane actually firing.
+
+    Wall-clock rows feed the same-runner absolute gate as usual.
+    """
+    from repro.core import slice_round
+    from repro.serve import (FleetControlService, ServiceConfig,
+                             bursty_trace, drive, make_cells,
+                             measure_capacity, poisson_trace)
+
+    n_cells, n_dev, n_rounds = (8, 64, 12) if full else (6, 48, 8)
+    n_req = 240 if full else 120
+    cells = make_cells(n_cells, n_devices=n_dev, n_rounds=n_rounds, seed=0)
+    probe = [slice_round(c, 0) for c in cells]
+
+    svc = FleetControlService(ServiceConfig(max_batch=8))
+    wtimes = svc.warmup(probe[0], max_devices=n_dev)
+    cap = measure_capacity(svc, probe)
+    svc.stats.reset()
+
+    # deadline budget in units of the measured full-batch cost: the
+    # miss-rate / p99 figures then mean the same thing on any machine
+    deadline = 8.0 * svc.config.max_batch / cap
+    trace = poisson_trace(cells, rate_hz=0.7 * cap, n_requests=n_req,
+                          seed=1, deadline_s=deadline)
+    rep = drive(svc, trace, reset_stats_after=n_req // 4)
+    s = svc.stats
+    p50, p99 = s.latency_percentile(50), s.latency_percentile(99)
+    first = rep.responses[0].latency_s   # first post-warmup request
+    emit("fleet_service_openloop_sustained", rep.wall_s / n_req * 1e6,
+         f"solves_per_sec={rep.sustained_rate_hz:.1f} "
+         f"offered_hz={rep.offered_rate_hz:.1f} "
+         f"throughput_ratio={rep.sustained_rate_hz / rep.offered_rate_hz:.3f}")
+    emit("fleet_service_openloop_latency", p99 * 1e6,
+         f"p50_ms={p50 * 1e3:.2f} p99_ms={p99 * 1e3:.2f} "
+         f"deadline_ms={deadline * 1e3:.2f} "
+         f"miss_rate={s.deadline_miss_rate:.4f} "
+         f"p99_over_deadline={p99 / deadline:.3f}")
+    emit("fleet_service_openloop_warmup", sum(wtimes.values()) * 1e6,
+         f"buckets={len(wtimes)} first_ms={first * 1e3:.2f} "
+         f"first_over_p50={first / max(p50, 1e-9):.2f}")
+
+    # bursty: stale-tolerant (1-round) cells mixed with the drifting
+    # ones; drifted cells ride the priority lane through each burst
+    svc2 = FleetControlService(ServiceConfig(max_batch=8))
+    svc2.warmup(probe[0], max_devices=n_dev)
+    static = make_cells(2, n_devices=n_dev, n_rounds=1, seed=100)
+    btrace = bursty_trace(static + cells, burst_rate_hz=2.0 * cap,
+                          burst_len=3 * n_cells, n_bursts=4,
+                          idle_s=4.0 * svc2.config.max_batch / cap, seed=2)
+    rep2 = drive(svc2, btrace)
+    s2 = svc2.stats.summary()
+    emit("fleet_service_openloop_bursty",
+         rep2.wall_s / len(btrace) * 1e6,
+         f"preemptions={svc2.stats.n_preemptions} "
+         f"priority_fraction={s2['priority_fraction']:.3f} "
+         f"mean_batch={s2['solved'] / max(s2['batches'], 1):.2f}")
+
+
 # ------------------------------------------------------- closed loop
 
 def bench_closed_loop_throughput(full: bool):
@@ -508,6 +581,7 @@ BENCHES = {
     "fl_round": bench_fl_round,
     "fl_sweep_scaling": bench_fl_sweep_scaling,
     "fleet_service_throughput": bench_fleet_service_throughput,
+    "fleet_service_openloop": bench_fleet_service_openloop,
     "closed_loop_throughput": bench_closed_loop_throughput,
     "roofline": bench_roofline,
 }

@@ -6,14 +6,29 @@ slot shapes, warm-started from each cell's cached previous solution —
 and prints steady-state throughput, latency percentiles and the
 warm-start iteration drop versus a cold-started service.
 
+``--open-loop`` switches to the arrival-driven mode instead: AOT-warm
+every jit bucket, measure full-batch capacity, then drive a seeded
+Poisson arrival trace at a fraction of it — with per-request deadlines,
+the adaptive batch-close policy and the priority lane live — and print
+sustained throughput, latency percentiles, deadline misses and
+preemption counts (the ``fleet_service_openloop`` bench family's loop).
+
     PYTHONPATH=src python examples/serve_demo.py
     PYTHONPATH=src python examples/serve_demo.py \
         --cells 16 --rounds 12 --devices 100 --coherence 0.95
+    PYTHONPATH=src python examples/serve_demo.py \
+        --open-loop --load 0.7 --requests 200
 """
 import argparse
 
 from repro.core import make_problem, slice_round
-from repro.serve import FleetControlService, ServiceConfig
+from repro.serve import (
+    FleetControlService,
+    ServiceConfig,
+    drive,
+    measure_capacity,
+    poisson_trace,
+)
 
 
 def stream_rounds(service, cells, n_rounds, skip_stats_rounds=2):
@@ -35,6 +50,39 @@ def stream_rounds(service, cells, n_rounds, skip_stats_rounds=2):
     return service.stats
 
 
+def run_open_loop(cells, args):
+    """Arrival-driven mode: warmup -> measured capacity -> seeded
+    Poisson trace at ``--load`` x capacity with deadline budgets of 8
+    measured batch costs."""
+    svc = FleetControlService(ServiceConfig(
+        max_batch=args.max_batch, power_solver=args.power_solver))
+    probe = [slice_round(c, 0) for c in cells]
+    wtimes = svc.warmup(probe[0], max_devices=args.devices)
+    print(f"warmup: buckets {sorted(wtimes)} in "
+          f"{sum(wtimes.values()):.2f} s")
+    cap = measure_capacity(svc, probe)
+    svc.stats.reset()
+    print(f"measured capacity: {cap:.1f} solves/s "
+          f"(full {args.max_batch}-slot batches)")
+
+    deadline = 8.0 * args.max_batch / cap
+    trace = poisson_trace(cells, rate_hz=args.load * cap,
+                          n_requests=args.requests, seed=args.seed,
+                          deadline_s=deadline)
+    rep = drive(svc, trace, reset_stats_after=args.requests // 4)
+    s = svc.stats.summary()
+    print(f"open loop @ {args.load:.0%} capacity "
+          f"({rep.offered_rate_hz:.1f} req/s offered, deadline "
+          f"{deadline * 1e3:.1f} ms):")
+    print(f"  sustained {rep.sustained_rate_hz:8.1f} solves/s   "
+          f"p50 {s['p50_latency_s'] * 1e3:7.2f} ms   "
+          f"p99 {s['p99_latency_s'] * 1e3:7.2f} ms")
+    print(f"  deadline misses {s['deadline_miss_rate']:.1%}   "
+          f"warm {s['warm_fraction']:.0%}   "
+          f"preemptions {s['preemptions']}   closes {s['closes']}")
+    return s
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--cells", type=int, default=8,
@@ -52,6 +100,16 @@ def main(argv=None):
                     help="dinkelbach (paper Algorithm 1, shows the "
                          "warm-start iteration drop) or the closed-form "
                          "analytic fast path")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="arrival-driven mode: AOT warmup + seeded "
+                         "Poisson trace with deadlines")
+    ap.add_argument("--load", type=float, default=0.7,
+                    help="open-loop offered rate as a fraction of the "
+                         "measured capacity")
+    ap.add_argument("--requests", type=int, default=120,
+                    help="open-loop trace length")
+    ap.add_argument("--seed", type=int, default=1,
+                    help="open-loop arrival trace seed")
     args = ap.parse_args(argv)
 
     cells = [make_problem("drifting_metro", seed=s, n_devices=args.devices,
@@ -59,6 +117,9 @@ def main(argv=None):
              for s in range(args.cells)]
     print(f"fleet control plane: {args.cells} cells x {args.devices} "
           f"devices, {args.rounds} rounds, coherence {args.coherence}")
+
+    if args.open_loop:
+        return run_open_loop(cells, args)
 
     results = {}
     for label, warm in (("warm", True), ("cold", False)):

@@ -2,20 +2,43 @@
 
 The paper's base station re-solves the joint selection/power problem
 (Algorithm 2) every round for every cell it serves; ``repro.serve`` turns
-the offline solvers into that online service — micro-batched, padded to
-quantised slot shapes, and warm-started from cached previous solutions on
-drifting channels.  See ``docs/serving.md``.
+the offline solvers into that online service — an open-loop arrival
+queue with per-request deadlines, continuous batching (adaptive
+batch-close policy), priority lanes for drifted cells, AOT-warmed jit
+buckets, and warm-started solves from cached previous solutions on
+drifting channels.  ``repro.serve.load_gen`` generates the seeded
+Poisson/bursty traffic and drives the loop.  See ``docs/serving.md``.
 """
 from repro.serve.fleet_service import (
+    CLOSE_DEADLINE,
+    CLOSE_FORCED,
+    CLOSE_FULL,
+    CLOSE_LINGER,
+    BatchRecord,
+    BucketCostModel,
     FleetControlService,
     ServiceConfig,
     ServiceStats,
     SolveRequest,
     SolveResponse,
+    batch_close_reason,
     quantized_problem_key,
+)
+from repro.serve.load_gen import (
+    Arrival,
+    DriveReport,
+    bursty_trace,
+    drive,
+    make_cells,
+    measure_capacity,
+    poisson_trace,
 )
 
 __all__ = [
     "FleetControlService", "ServiceConfig", "ServiceStats",
-    "SolveRequest", "SolveResponse", "quantized_problem_key",
+    "SolveRequest", "SolveResponse", "BatchRecord", "BucketCostModel",
+    "batch_close_reason", "quantized_problem_key",
+    "CLOSE_FULL", "CLOSE_DEADLINE", "CLOSE_LINGER", "CLOSE_FORCED",
+    "Arrival", "DriveReport", "make_cells", "poisson_trace",
+    "bursty_trace", "drive", "measure_capacity",
 ]

@@ -1,37 +1,63 @@
-"""Micro-batching fleet-control-plane service with warm-started solves.
+"""Open-loop fleet control plane: deadlines, continuous batching, warmup.
 
-The serving problem: a base station (or a control plane serving many base
-stations) receives a stream of per-cell solve requests — "here is my
-cell's current channel/energy state, give me (a*, P*) for the next round"
-— and must answer them at high throughput and bounded latency.  Requests
-arrive one cell at a time, but the solvers (``repro.core.batch``) are at
-their best on big padded batches; and successive requests from the same
-cell are nearly identical on a coherent channel (``drifting_metro``), so
-most of each solve is recomputation the warm-start path can skip.
+The serving problem: a control plane serving many base-station cells
+receives a *stream* of per-cell solve requests — "here is my cell's
+current channel/energy state, give me (a*, P*) for the next round" — as
+an open-loop arrival process.  A round's solution is worthless after the
+channel decorrelates, so every request carries a latency budget; the
+solvers (``repro.core.batch``) are at their best on big padded batches;
+and successive requests from the same cell are nearly identical on a
+coherent channel (``drifting_metro``), so most of each solve is
+recomputation the warm-start path can skip.
 
-:class:`FleetControlService` packs both observations into one loop:
+:class:`FleetControlService` packs those observations into one loop:
 
+* **arrival queue + deadlines** — ``submit`` stamps each request with an
+  arrival time and an absolute deadline (``deadline_s`` budget, else
+  ``ServiceConfig.default_deadline_s``, else unbounded);
+* **continuous batching** — requests accumulate until the adaptive
+  close policy (:func:`batch_close_reason`, the LLM-serving idiom)
+  closes the micro-batch: when it is *full*, when the batch's tightest
+  remaining *deadline* budget drops below the bucket's measured solve
+  cost (EWMA, :class:`BucketCostModel`), or when the oldest request has
+  *lingered* past the latency bound for deadline-less traffic.  ``poll``
+  is the non-blocking heartbeat that applies the policy; ``step`` forces
+  a close (the legacy synchronous mode); ``run`` drains the queue;
+* **priority lanes** — a request whose cell has cached state but whose
+  quantised feature key no longer matches it (the channel drifted past
+  the quantisation step) enters the priority lane and preempts normal
+  traffic: its stale cached solution is the one most urgently wrong;
+* **AOT warmup** — ``warmup()`` pre-executes every power-of-two device
+  bucket's jit program (cold and warm init signatures) at startup, so no
+  live request ever eats a trace/compile;
 * **micro-batching** — queued requests with compatible static metadata
   are packed into a padded :class:`~repro.core.batch.ProblemBatch` of
-  fixed slot shape (``max_batch`` instance slots, device axis padded to a
-  power-of-two bucket via :func:`repro.core.batch.pad_batch`), so jit
+  fixed slot shape (``max_batch`` instance slots, device axis padded to
+  a power-of-two bucket via :func:`repro.core.batch.pad_batch`), so jit
   compiles one program per bucket instead of one per request shape;
 * **warm starts** — each solved request's ``(a*, P*)`` is cached and fed
   back as ``init`` for the cell's next solve (bit-identical solutions,
   collapsed inner iterations — see ``core.alternating``'s warm-start
-  notes);
-* **solution cache** — an LRU keyed on *quantised* problem features
-  (log-domain rounding, :func:`quantized_problem_key`), so a request
-  whose channel drifted less than the quantisation step reuses the state
-  of any equivalent earlier problem, not just its own cell's;
-* **accounting** — steady-state solves/sec, p50/p99 request latency,
-  cache hit rates and inner-iteration counts
-  (:class:`ServiceStats`; the ``fleet_service_throughput`` benchmark and
-  CI gate consume these).
+  notes), keyed both on quantised problem features
+  (:func:`quantized_problem_key`) and per cell;
+* **accounting** — sustained solves/sec, p50/p99 request latency,
+  deadline-miss rate, preemption and close-reason counters, cache hit
+  rates and inner-iteration counts (:class:`ServiceStats`; the
+  ``fleet_service_throughput`` / ``fleet_service_openloop`` benchmarks
+  and CI gate consume these).
 
-The loop is deliberately synchronous (``submit`` + ``step``): the unit of
-work is one compiled batched solve, and a thread pump around it would
-only blur the accounting.  ``run`` drains the queue for script use.
+The loop stays deliberately synchronous — the unit of work is one
+compiled batched solve, and a thread pump around it would only blur the
+accounting.  ``repro.serve.load_gen`` provides the seeded Poisson/bursty
+open-loop arrival generator and the driver that calls ``poll``.
+
+Clock domains: with no ``now`` argument everything runs on
+``time.perf_counter()`` wall time.  Passing explicit ``now`` stamps to
+``submit``/``poll``/``step`` runs the service on a caller-supplied
+(virtual) clock — batch composition, deadline misses, and every
+non-latency counter then become deterministic functions of the arrival
+trace (the golden/determinism suites pin this).  Use one domain
+consistently per service instance.
 """
 from __future__ import annotations
 
@@ -39,7 +65,7 @@ import collections
 import dataclasses
 import hashlib
 import time
-from typing import Hashable, NamedTuple, Optional
+from typing import Hashable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +73,7 @@ import numpy as np
 
 from repro.core.alternating import JointSolution, WarmStart
 from repro.core.batch import (
+    _PAD_VALUES,
     _STATIC_FIELDS,
     pad_batch,
     solve_joint_batch,
@@ -54,13 +81,21 @@ from repro.core.batch import (
 )
 from repro.core.problem import WirelessFLProblem
 
+_INF = float("inf")
+
+# close reasons reported by the batch-close policy / ServiceStats
+CLOSE_FULL = "full"          # the bucket's instance slots are exhausted
+CLOSE_DEADLINE = "deadline"  # tightest budget ~ the bucket's solve cost
+CLOSE_LINGER = "linger"      # oldest request hit the linger latency bound
+CLOSE_FORCED = "forced"      # explicit step()/run() drain
+
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     """Knobs of the fleet control plane."""
 
     max_batch: int = 16           # micro-batch instance slots
-    min_device_bucket: int = 8    # smallest padded device-axis size
+    min_device_bucket: int = 8    # smallest padded device-axis bucket
     method: str = "fused"         # "fused" | "alternating"
     power_solver: Optional[str] = None   # None => the method's default
     eps: float = 1e-7
@@ -69,12 +104,27 @@ class ServiceConfig:
     cache_size: int = 4096        # LRU entries (feature-keyed + per-cell)
     quant_decimals: int = 2       # log10 rounding of the cache key
     latency_window: int = 8192    # latencies kept for the percentiles
+    # ---- open-loop control (continuous batching) -----------------------
+    default_deadline_s: Optional[float] = None  # per-request budget; None
+    #                                            = unbounded (linger rules)
+    close_safety: float = 1.5     # close when budget <= safety * est cost
+    max_linger_s: float = 5e-3    # universal max wait of the oldest request
+    prior_solve_s: float = 5e-3   # cost-model prior before measurements
+    cost_smoothing: float = 0.3   # EWMA weight of new measurements; 0
+    #                               freezes the prior (deterministic
+    #                               close decisions under a virtual clock)
+    record_batches: bool = False  # keep a BatchRecord log (golden tests)
 
 
 class SolveRequest(NamedTuple):
     cell_id: Hashable
     problem: WirelessFLProblem
     t_submit: float
+    t_deadline: float = _INF      # absolute, same clock domain as t_submit
+    priority: bool = False        # routed through the priority lane
+    fkey: Optional[bytes] = None  # quantised feature key (warm_start only)
+    ckey: Optional[tuple] = None  # static-compatibility key (micro-batching)
+    seq: int = 0                  # submission order, unique per service
 
 
 class SolveResponse(NamedTuple):
@@ -87,7 +137,21 @@ class SolveResponse(NamedTuple):
     solution: JointSolution
     warm_started: bool            # solve was seeded from cached state
     cache_hit: bool               # the feature-keyed LRU supplied the seed
-    latency_s: float              # submit -> response wall time
+    latency_s: float              # submit -> response time (request clock)
+    deadline_missed: bool = False  # completed after the request's deadline
+    seq: int = 0                  # the request's submission sequence number
+
+
+class BatchRecord(NamedTuple):
+    """One served micro-batch (``ServiceConfig.record_batches``): enough
+    to replay the exact solve offline — the golden suites rebuild the
+    same padded batch from ``seqs`` and compare bitwise."""
+
+    seqs: tuple[int, ...]         # request seqs, slot order
+    cell_ids: tuple               # matching cell ids
+    n_bucket: int                 # padded device-axis bucket
+    reason: str                   # CLOSE_* that closed the batch
+    priority: bool                # served from the priority lane
 
 
 class ServiceStats:
@@ -105,6 +169,10 @@ class ServiceStats:
         self.n_batches = 0
         self.n_warm = 0
         self.n_cache_hits = 0
+        self.n_priority = 0
+        self.n_deadline_misses = 0
+        self.n_preemptions = 0
+        self.closes = collections.Counter()
         self.solve_seconds = 0.0
         self.outer_iters = 0
         self.inner_iters = 0
@@ -112,15 +180,19 @@ class ServiceStats:
 
     # ---- recording (service-internal) ----------------------------------
     def record_batch(self, responses, solve_s: float, outer: int,
-                     inner: int) -> None:
+                     inner: int, reason: str = CLOSE_FORCED,
+                     preempted: bool = False) -> None:
         self.n_batches += 1
         self.n_solved += len(responses)
         self.solve_seconds += solve_s
         self.outer_iters += outer
         self.inner_iters += inner
+        self.closes[reason] += 1
+        self.n_preemptions += bool(preempted)
         for r in responses:
             self.n_warm += bool(r.warm_started)
             self.n_cache_hits += bool(r.cache_hit)
+            self.n_deadline_misses += bool(r.deadline_missed)
             self.latencies.append(r.latency_s)
 
     # ---- derived figures ------------------------------------------------
@@ -129,18 +201,55 @@ class ServiceStats:
         return self.n_solved / self.solve_seconds if self.solve_seconds else 0.0
 
     def latency_percentile(self, q: float) -> float:
-        return float(np.percentile(np.asarray(self.latencies), q)) \
-            if self.latencies else 0.0
+        """Latency percentile (seconds) over the sliding sample window.
+
+        Semantics, pinned by ``tests/test_fleet_service.py``:
+
+        * empty window -> ``nan`` — never ``0.0``, which would read as
+          "infinitely fast" in dashboards and bench gates;
+        * one sample -> that sample, for every ``q``;
+        * otherwise numpy's default linear interpolation between order
+          statistics (the p50 of two samples is their midpoint);
+        * the window keeps the newest ``latency_window`` samples — older
+          requests fall off the edge and stop influencing percentiles.
+        """
+        if not self.latencies:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies), q))
 
     @property
     def warm_fraction(self) -> float:
         return self.n_warm / self.n_solved if self.n_solved else 0.0
 
     @property
+    def deadline_miss_rate(self) -> float:
+        return self.n_deadline_misses / self.n_solved if self.n_solved else 0.0
+
+    @property
     def mean_inner_iters(self) -> float:
         """Mean inner (Algorithm-1) iterations per micro-batch solve —
         the figure warm starts collapse (0.0 in analytic mode)."""
         return self.inner_iters / self.n_batches if self.n_batches else 0.0
+
+    def counter_summary(self) -> dict:
+        """The integer counters only — no wall-clock-derived field.
+
+        Under a virtual clock (explicit ``now`` stamps) every entry is a
+        deterministic function of the arrival trace; the golden suites
+        compare this dict across runs and processes."""
+        return {
+            "requests": self.n_requests,
+            "solved": self.n_solved,
+            "batches": self.n_batches,
+            "warm": self.n_warm,
+            "cache_hits": self.n_cache_hits,
+            "priority": self.n_priority,
+            "deadline_misses": self.n_deadline_misses,
+            "preemptions": self.n_preemptions,
+            "closes": dict(self.closes),
+            "outer_iters": self.outer_iters,
+            "inner_iters": self.inner_iters,
+        }
 
     def summary(self) -> dict:
         return {
@@ -153,6 +262,11 @@ class ServiceStats:
             "warm_fraction": self.warm_fraction,
             "cache_hit_fraction": (self.n_cache_hits / self.n_solved
                                    if self.n_solved else 0.0),
+            "deadline_miss_rate": self.deadline_miss_rate,
+            "preemptions": self.n_preemptions,
+            "priority_fraction": (self.n_priority / self.n_requests
+                                  if self.n_requests else 0.0),
+            "closes": dict(self.closes),
             "mean_outer_iters": (self.outer_iters / self.n_batches
                                  if self.n_batches else 0.0),
             "mean_inner_iters": self.mean_inner_iters,
@@ -202,11 +316,85 @@ def _compat_key(problem: WirelessFLProblem) -> tuple:
             None if problem.fading is None else problem.fading.shape[1])
 
 
-def _next_pow2(n: int, floor: int) -> int:
-    b = max(floor, 1)
-    while b < n:
-        b *= 2
-    return b
+def _next_pow2(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= ``max(n, floor, 1)``.
+
+    The floor itself is rounded *up* to a power of two (``floor=12``
+    yields 16, never 12), so every bucket the service registers — and
+    ``warmup`` pre-compiles — is a true power of two.  Pinned by unit
+    tests in ``tests/test_fleet_service.py``.
+    """
+    return 1 << (max(n, floor, 1) - 1).bit_length()
+
+
+def batch_close_reason(batch: Sequence[SolveRequest], now: float,
+                       est_cost_s: float,
+                       config: ServiceConfig) -> Optional[str]:
+    """The adaptive batch-close policy (continuous-batching idiom).
+
+    Given the candidate micro-batch ``batch`` (the FIFO head-compatible
+    prefix of one lane), decide whether it must close *now* rather than
+    keep accumulating arrivals:
+
+    * :data:`CLOSE_FULL` — all ``max_batch`` instance slots are taken;
+      waiting longer cannot improve amortisation.
+    * :data:`CLOSE_DEADLINE` — the tightest remaining budget
+      ``min(deadline) - now`` has dropped to ``close_safety`` times the
+      bucket's estimated solve cost: closing any later would make that
+      request infeasible even with a perfect solve.  With continuous
+      polling and an accurate estimate, a request whose budget covered
+      the solve cost at submission is therefore *never* closed after its
+      deadline (property-tested).
+    * :data:`CLOSE_LINGER` — the oldest request has waited
+      ``max_linger_s``, the universal wait bound: sparse traffic (and
+      deadline-less traffic in particular) gets predictable latency
+      instead of waiting forever for a full bucket.  Under load this
+      rule stops firing on its own — the backlog reaches ``max_batch``
+      between solves and the *full* rule takes over, which is exactly
+      the continuous-batching degradation curve (small batches / low
+      latency when idle, full buckets at saturation).
+
+    Pure host-side function of (batch, clock, cost estimate, config) —
+    the hypothesis suite drives it directly.  Returns the close reason,
+    or ``None`` to keep accumulating.
+    """
+    if not batch:
+        return None
+    if len(batch) >= config.max_batch:
+        return CLOSE_FULL
+    budget = min(r.t_deadline for r in batch) - now
+    if budget <= est_cost_s * config.close_safety:
+        return CLOSE_DEADLINE
+    if now - batch[0].t_submit >= config.max_linger_s:
+        return CLOSE_LINGER
+    return None
+
+
+class BucketCostModel:
+    """EWMA of measured per-bucket solve wall time (seconds).
+
+    The close policy needs "how long will this bucket's solve take" to
+    spend a request's remaining budget accumulating arrivals instead of
+    closing too early.  Estimates start at ``prior_s`` and track
+    measurements with weight ``alpha``; ``alpha=0`` freezes the prior,
+    making close decisions a deterministic function of the arrival trace
+    (the golden/determinism suites run in that mode).
+    """
+
+    def __init__(self, prior_s: float, alpha: float):
+        self.prior_s = float(prior_s)
+        self.alpha = float(alpha)
+        self._est: dict[int, float] = {}
+
+    def estimate(self, bucket: int) -> float:
+        return self._est.get(bucket, self.prior_s)
+
+    def observe(self, bucket: int, seconds: float) -> None:
+        if self.alpha <= 0.0:
+            return
+        prev = self._est.get(bucket)
+        self._est[bucket] = seconds if prev is None else \
+            (1.0 - self.alpha) * prev + self.alpha * seconds
 
 
 class _LRU:
@@ -232,79 +420,214 @@ class _LRU:
         return len(self._d)
 
 
+def _resize_problem(problem: WirelessFLProblem,
+                    n: int) -> WirelessFLProblem:
+    """A copy of ``problem`` with exactly ``n`` devices (leaves truncated
+    or cyclically tiled).  ``warmup``'s dummy-instance builder: the
+    values only pin jit input shapes/dtypes, never answers."""
+    kw = {}
+    for f in _PAD_VALUES:
+        v = np.asarray(getattr(problem, f))
+        kw[f] = jnp.asarray(np.resize(v, (n,) + v.shape[1:]))
+    fad = problem.fading
+    if fad is not None:
+        fad = np.asarray(fad)
+        fad = jnp.asarray(np.resize(fad, (n,) + fad.shape[1:]))
+    return dataclasses.replace(problem, fading=fad, **kw)
+
+
 class FleetControlService:
-    """The micro-batching, warm-starting fleet control plane."""
+    """The open-loop, continuously-batching, warm-starting control plane."""
 
     def __init__(self, config: ServiceConfig = ServiceConfig()):
         self.config = config
         self.stats = ServiceStats(config.latency_window)
+        # two arrival lanes; the priority lane preempts the normal one
         self._queue: collections.deque[SolveRequest] = collections.deque()
+        self._prio: collections.deque[SolveRequest] = collections.deque()
         # feature-keyed LRU: quantised problem -> WarmStart (unpadded)
         self._feature_cache = _LRU(config.cache_size)
         # per-cell last solution: the fallback seed when the channel
         # drifted past the quantisation step (new feature key)
         self._cell_cache = _LRU(config.cache_size)
+        # per-cell last feature key — the drift detector feeding the
+        # priority lane (cached state exists but its key went stale)
+        self._cell_fkey = _LRU(config.cache_size)
+        self._cost = BucketCostModel(config.prior_solve_s,
+                                     config.cost_smoothing)
+        self.warmed_buckets: set[int] = set()   # AOT-precompiled buckets
+        self.buckets_used: set[int] = set()     # buckets served so far
+        self.batch_log: list[BatchRecord] = []  # when record_batches
+        self._seq = 0
+
+    # ------------------------------------------------------------- warmup
+    def warmup(self, template: WirelessFLProblem, *,
+               max_devices: Optional[int] = None,
+               warm: Optional[bool] = None) -> dict[int, float]:
+        """AOT-precompile every power-of-two device bucket up front.
+
+        Executes one dummy padded solve per (bucket, cold/warm-init)
+        jit signature — ``template`` pins the request leaf dtypes and
+        fading shape (pass a ``slice_round`` problem when serving sliced
+        rounds), buckets run from ``min_device_bucket`` up to
+        ``_next_pow2(max_devices)`` (default: the template's fleet
+        size).  After warmup no live request pays a trace/compile: the
+        first request's latency sits within the steady-state band
+        (asserted by the warmup test and the openloop bench gate).
+
+        ``stats`` are untouched; the caches are untouched (the dummy
+        solves bypass the request path).  Returns ``{bucket: seconds}``
+        (compile + execute wall time per bucket).
+        """
+        cfg = self.config
+        hi = _next_pow2(max(max_devices or 0, template.n_devices),
+                        cfg.min_device_bucket)
+        warm = cfg.warm_start if warm is None else warm
+        timings: dict[int, float] = {}
+        b = _next_pow2(1, cfg.min_device_bucket)
+        while b <= hi:
+            prob = _resize_problem(template, b)
+            batch = pad_batch(stack_problems([prob]),
+                              batch_size=cfg.max_batch, n_max=b)
+            t0 = time.perf_counter()
+            jax.block_until_ready(self._solve(batch, init=None).a)
+            if warm:
+                z = jnp.zeros(self._sol_shape(batch), jnp.float32)
+                jax.block_until_ready(
+                    self._solve(batch, init=WarmStart(a=z, power=z)).a)
+            timings[b] = time.perf_counter() - t0
+            self.warmed_buckets.add(b)
+            b *= 2
+        return timings
 
     # ------------------------------------------------------------- intake
-    def submit(self, cell_id: Hashable,
-               problem: WirelessFLProblem) -> None:
-        """Queue one per-cell solve request."""
+    def submit(self, cell_id: Hashable, problem: WirelessFLProblem, *,
+               deadline_s: Optional[float] = None,
+               priority: Optional[bool] = None,
+               now: Optional[float] = None) -> SolveRequest:
+        """Queue one per-cell solve request.
+
+        ``deadline_s`` is the request's latency budget (defaults to
+        ``ServiceConfig.default_deadline_s``; ``None`` = unbounded).
+        ``priority=None`` auto-routes: a cell whose cached solution's
+        feature key no longer matches the incoming problem has drifted
+        past the quantisation step and jumps the priority lane (its
+        cached answer is the most urgently wrong one).  ``now`` pins the
+        arrival stamp for virtual-clock runs.
+        """
+        now = time.perf_counter() if now is None else now
+        cfg = self.config
+        fkey = quantized_problem_key(problem, cfg.quant_decimals) \
+            if cfg.warm_start else None
+        if priority is None:
+            last = self._cell_fkey.get(cell_id) if fkey is not None else None
+            priority = last is not None and last != fkey
+        if deadline_s is None:
+            deadline_s = cfg.default_deadline_s
+        self._seq += 1
+        req = SolveRequest(
+            cell_id=cell_id, problem=problem, t_submit=now,
+            t_deadline=_INF if deadline_s is None else now + deadline_s,
+            priority=bool(priority), fkey=fkey,
+            ckey=_compat_key(problem), seq=self._seq)
         self.stats.n_requests += 1
-        self._queue.append(SolveRequest(cell_id=cell_id, problem=problem,
-                                        t_submit=time.perf_counter()))
+        self.stats.n_priority += bool(req.priority)
+        (self._prio if req.priority else self._queue).append(req)
+        return req
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._prio) + len(self._queue)
 
     # ------------------------------------------------------------ serving
-    def _take_micro_batch(self) -> list[SolveRequest]:
-        """Pop up to ``max_batch`` queued requests stackable with the
-        oldest one (same static metadata / fading-ness); later
-        incompatible requests keep their queue order."""
-        if not self._queue:
+    def _eligible(self, lane) -> list[SolveRequest]:
+        """The micro-batch that *would* close: the first ``max_batch``
+        requests of ``lane`` stackable with its head (same static
+        metadata / fading-ness), in FIFO order, without popping."""
+        if not lane:
             return []
-        key = _compat_key(self._queue[0].problem)
-        taken, kept = [], collections.deque()
-        while self._queue and len(taken) < self.config.max_batch:
-            req = self._queue.popleft()
-            if _compat_key(req.problem) == key:
-                taken.append(req)
-            else:
-                kept.append(req)
-        kept.extend(self._queue)
-        self._queue = kept
+        key = lane[0].ckey
+        out = []
+        for req in lane:
+            if req.ckey == key:
+                out.append(req)
+                if len(out) >= self.config.max_batch:
+                    break
+        return out
+
+    def _take_micro_batch(self, lane) -> list[SolveRequest]:
+        """Pop the ``_eligible`` requests; later incompatible requests
+        keep their lane order."""
+        if not lane:
+            return []
+        key = lane[0].ckey
+        taken: list[SolveRequest] = []
+        kept: collections.deque = collections.deque()
+        while lane and len(taken) < self.config.max_batch:
+            req = lane.popleft()
+            (taken if req.ckey == key else kept).append(req)
+        kept.extend(lane)
+        lane.clear()
+        lane.extend(kept)
         return taken
 
-    def _row_keys(self, batch, sizes) -> list[bytes]:
-        """Per-request quantised feature keys from the *stacked* batch.
+    def poll(self, now: Optional[float] = None) -> list[SolveResponse]:
+        """The open-loop heartbeat: serve at most one micro-batch *iff*
+        a lane's close condition holds (:func:`batch_close_reason`;
+        priority lane checked first), else return ``[]`` immediately.
 
-        One device->host transfer per leaf for the whole micro-batch
-        (the per-request ``quantized_problem_key`` would pay ~10 tiny
-        transfers per request); digests match the per-problem function
-        exactly because the padded rows are sliced back to each
-        request's true fleet size before hashing.
+        Call it from the arrival driver between submissions.  ``now``
+        runs the check (and stamps completions) on a virtual clock;
+        omitted, wall ``perf_counter`` time is used throughout.
         """
+        t = time.perf_counter() if now is None else now
+        for lane, is_prio in ((self._prio, True), (self._queue, False)):
+            elig = self._eligible(lane)
+            if not elig:
+                continue
+            bucket = _next_pow2(max(r.problem.n_devices for r in elig),
+                                self.config.min_device_bucket)
+            reason = batch_close_reason(elig, t, self._cost.estimate(bucket),
+                                        self.config)
+            if reason is not None:
+                return self._serve(self._take_micro_batch(lane), reason,
+                                   priority_lane=is_prio, now=now)
+        return []
+
+    def step(self, now: Optional[float] = None) -> list[SolveResponse]:
+        """Force-close one micro-batch (priority lane first) regardless
+        of the close policy — the legacy synchronous mode, and the drain
+        path (:data:`CLOSE_FORCED`)."""
+        lane, is_prio = (self._prio, True) if self._prio \
+            else (self._queue, False)
+        reqs = self._take_micro_batch(lane)
+        if not reqs:
+            return []
+        return self._serve(reqs, CLOSE_FORCED, priority_lane=is_prio,
+                           now=now)
+
+    def run(self, requests=None) -> list[SolveResponse]:
+        """Submit ``requests`` (``(cell_id, problem)`` pairs, optional)
+        and drain the queue with forced closes; responses in completion
+        order (priority lane first)."""
+        for cell_id, problem in (requests or []):
+            self.submit(cell_id, problem)
+        out = []
+        while self.pending:
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------- solve
+    def _sol_shape(self, batch) -> tuple:
+        return batch.mask.shape if batch.problem.fading is None \
+            else batch.mask.shape + (batch.problem.fading.shape[-1],)
+
+    def _solve(self, batch, init):
         cfg = self.config
-        statics = repr([(f, getattr(batch.problem, f))
-                        for f in _STATIC_FIELDS]).encode()
-        leaves = [_quantize(np.asarray(getattr(batch.problem, f),
-                                       np.float64), cfg.quant_decimals)
-                  for f in _KEY_FIELDS]
-        if batch.problem.fading is not None:
-            leaves.append(_quantize(np.asarray(batch.problem.fading,
-                                               np.float64),
-                                    cfg.quant_decimals))
-        keys = []
-        for i, n in enumerate(sizes):
-            h = hashlib.sha1()
-            h.update(statics)
-            for leaf in leaves:
-                row = np.ascontiguousarray(leaf[i, :n])
-                h.update(repr(row.shape).encode())
-                h.update(row.tobytes())
-            keys.append(h.digest())
-        return keys
+        return solve_joint_batch(batch, method=cfg.method,
+                                 power_solver=cfg.power_solver,
+                                 eps=cfg.eps, max_iters=cfg.max_iters,
+                                 init=init)
 
     def _lookup_seed(self, cell_id, fkey: bytes,
                      shape) -> tuple[Optional[WarmStart], bool]:
@@ -317,27 +640,25 @@ class FleetControlService:
             return seed, False
         return None, False
 
-    def step(self) -> list[SolveResponse]:
-        """Drain one micro-batch: pack, warm-start, solve, account."""
-        reqs = self._take_micro_batch()
-        if not reqs:
-            return []
+    def _serve(self, reqs: list[SolveRequest], reason: str, *,
+               priority_lane: bool,
+               now: Optional[float] = None) -> list[SolveResponse]:
+        """Pack one micro-batch, warm-start, solve, account."""
         cfg = self.config
+        virtual = now is not None
+        # a priority batch preempts whenever normal traffic is left waiting
+        preempted = priority_lane and bool(self._queue)
         t0 = time.perf_counter()
 
         batch = stack_problems([r.problem for r in reqs])
         bucket = _next_pow2(batch.n_max, cfg.min_device_bucket)
         batch = pad_batch(batch, batch_size=cfg.max_batch, n_max=bucket)
         sizes = [r.problem.n_devices for r in reqs]
-        # keying/caching is warm-start machinery: a cold-configured
-        # service skips the quantise+hash work and keeps its LRUs empty
-        fkeys = self._row_keys(batch, sizes) if cfg.warm_start else None
 
         # per-request warm seeds, packed to the padded slot shape (zero
         # rows = "no previous state" = cold, element_warm_lambda's
         # fallback)
-        sol_shape = batch.mask.shape if batch.problem.fading is None \
-            else batch.mask.shape + (batch.problem.fading.shape[-1],)
+        sol_shape = self._sol_shape(batch)
         per_round = (len(sol_shape) == 3)
         init = None
         warm_flags = [False] * len(reqs)
@@ -348,7 +669,7 @@ class FleetControlService:
             for i, req in enumerate(reqs):
                 shape = (sizes[i], sol_shape[-1]) if per_round \
                     else (sizes[i],)
-                seed, hit = self._lookup_seed(req.cell_id, fkeys[i], shape)
+                seed, hit = self._lookup_seed(req.cell_id, req.fkey, shape)
                 if seed is None:
                     continue
                 warm_flags[i], hit_flags[i] = True, hit
@@ -357,12 +678,12 @@ class FleetControlService:
             if any(warm_flags):
                 init = WarmStart(a=jnp.asarray(a0), power=jnp.asarray(p0))
 
-        sol = solve_joint_batch(batch, method=cfg.method,
-                                power_solver=cfg.power_solver,
-                                eps=cfg.eps, max_iters=cfg.max_iters,
-                                init=init)
+        sol = self._solve(batch, init=init)
         jax.block_until_ready(sol.a)
         t1 = time.perf_counter()
+        self._cost.observe(bucket, t1 - t0)
+        self.buckets_used.add(bucket)
+        t_done = now if virtual else t1
 
         # one transfer per field for the whole batch, then numpy slicing
         a_np = np.asarray(sol.a)
@@ -384,21 +705,19 @@ class FleetControlService:
                 inner_iters=inner_np[i] if inner_np.ndim else inner_np)
             if cfg.warm_start:
                 state = inst.resume
-                self._feature_cache.put(fkeys[i], state)
+                self._feature_cache.put(req.fkey, state)
                 self._cell_cache.put(req.cell_id, state)
+                self._cell_fkey.put(req.cell_id, req.fkey)
             responses.append(SolveResponse(
                 cell_id=req.cell_id, solution=inst,
                 warm_started=warm_flags[i], cache_hit=hit_flags[i],
-                latency_s=t1 - req.t_submit))
-        self.stats.record_batch(responses, t1 - t0, outer, inner)
+                latency_s=t_done - req.t_submit,
+                deadline_missed=t_done > req.t_deadline, seq=req.seq))
+        if cfg.record_batches:
+            self.batch_log.append(BatchRecord(
+                seqs=tuple(r.seq for r in reqs),
+                cell_ids=tuple(r.cell_id for r in reqs),
+                n_bucket=bucket, reason=reason, priority=priority_lane))
+        self.stats.record_batch(responses, t1 - t0, outer, inner,
+                                reason=reason, preempted=preempted)
         return responses
-
-    def run(self, requests=None) -> list[SolveResponse]:
-        """Submit ``requests`` (``(cell_id, problem)`` pairs, optional)
-        and drain the queue; responses in completion order."""
-        for cell_id, problem in (requests or []):
-            self.submit(cell_id, problem)
-        out = []
-        while self._queue:
-            out.extend(self.step())
-        return out

@@ -1,0 +1,220 @@
+"""Seeded open-loop arrival generation + driver for the fleet service.
+
+Real metro traffic is an *open-loop* arrival process: requests land at
+times the service does not control, and a round's solution is worthless
+after the channel decorrelates.  This module turns the drifting
+scenarios into that traffic shape:
+
+* :func:`make_cells` — a metro area as per-cell drifting trajectories;
+* :func:`poisson_trace` — memoryless arrivals at a fixed offered rate;
+* :func:`bursty_trace` — ON/OFF (Markov-modulated) bursts separated by
+  idle gaps, the priority-lane stressor;
+* :func:`drive` — the open-loop driver: submits each arrival at its
+  trace time (wall clock, or a deterministic virtual clock) and pumps
+  :meth:`FleetControlService.poll` between arrivals;
+* :func:`measure_capacity` — the service's sustained full-batch solve
+  rate, the denominator for "offered load at 0.8x capacity" tests and
+  the ``fleet_service_openloop`` bench.
+
+Everything is seeded: the same ``(cells, trace seed)`` pair replays the
+identical request stream, and under ``clock="virtual"`` (plus
+``ServiceConfig.cost_smoothing=0``) the service's batch compositions and
+counters replay identically too — the golden/determinism suites pin
+that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core.problem import WirelessFLProblem
+from repro.core.scenarios import make_problem, slice_round
+from repro.serve.fleet_service import FleetControlService, SolveResponse
+
+
+class Arrival(NamedTuple):
+    """One scheduled request: cell ``cell_id``'s drift round ``round_k``
+    arriving ``t`` seconds after the trace starts."""
+
+    t: float
+    cell_id: int
+    round_k: int
+    problem: WirelessFLProblem
+    deadline_s: Optional[float] = None
+
+
+def make_cells(n_cells: int, *, n_devices: int = 64, n_rounds: int = 8,
+               scenario: str = "drifting_metro", seed: int = 0,
+               **overrides) -> list[WirelessFLProblem]:
+    """A metro area: per-cell drifting trajectories (seeded)."""
+    return [make_problem(scenario, seed=seed + c, n_devices=n_devices,
+                         n_rounds=n_rounds, **overrides)
+            for c in range(n_cells)]
+
+
+def _slices(cells: Sequence[WirelessFLProblem]) -> list[list]:
+    # pre-slice every (cell, round) problem once; traces then reference
+    # them without paying slice_round per arrival
+    return [[slice_round(c, k) for k in range(c.fading.shape[1])]
+            for c in cells]
+
+
+def poisson_trace(cells: Sequence[WirelessFLProblem], *, rate_hz: float,
+                  n_requests: int, seed: int = 0,
+                  deadline_s: Optional[float] = None) -> list[Arrival]:
+    """Open-loop Poisson arrivals at offered rate ``rate_hz``.
+
+    Inter-arrival gaps are i.i.d. Exponential(rate); each arrival picks
+    a uniformly random cell and consumes that cell's *next* drift round
+    (per-cell round counters, wrapping at the trajectory length) — the
+    stream a warm-started service should track.
+    """
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    sl = _slices(cells)
+    counters = [0] * len(cells)
+    trace = []
+    for t in times:
+        c = int(rng.integers(len(cells)))
+        k = counters[c] % len(sl[c])
+        counters[c] += 1
+        trace.append(Arrival(t=float(t), cell_id=c, round_k=k,
+                             problem=sl[c][k], deadline_s=deadline_s))
+    return trace
+
+
+def bursty_trace(cells: Sequence[WirelessFLProblem], *,
+                 burst_rate_hz: float, burst_len: int, n_bursts: int,
+                 idle_s: float, seed: int = 0,
+                 deadline_s: Optional[float] = None) -> list[Arrival]:
+    """ON/OFF bursty arrivals: ``n_bursts`` bursts of ``burst_len``
+    Poisson-at-``burst_rate_hz`` requests, separated by ``idle_s`` idle
+    gaps.  Within a burst cells are drawn uniformly; each burst advances
+    every cell's channel by (at most) one round, so burst *b* mixes
+    drifted cells with cells whose channel the cache still covers — the
+    priority-lane stressor.
+    """
+    rng = np.random.default_rng(seed)
+    sl = _slices(cells)
+    counters = [0] * len(cells)
+    trace = []
+    t = 0.0
+    for _ in range(n_bursts):
+        for _ in range(burst_len):
+            t += float(rng.exponential(1.0 / burst_rate_hz))
+            c = int(rng.integers(len(cells)))
+            k = counters[c] % len(sl[c])
+            counters[c] += 1
+            trace.append(Arrival(t=t, cell_id=c, round_k=k,
+                                 problem=sl[c][k], deadline_s=deadline_s))
+        t += idle_s
+    return trace
+
+
+@dataclasses.dataclass
+class DriveReport:
+    """What one open-loop run produced (stats live on ``service.stats``)."""
+
+    responses: list[SolveResponse]
+    wall_s: float                 # driver wall time (submit -> drained)
+    offered_rate_hz: float        # arrivals / trace span
+    sustained_rate_hz: float      # completions / wall time
+
+
+def drive(service: FleetControlService, trace: Sequence[Arrival], *,
+          clock: str = "wall", tick_s: float = 1e-3,
+          reset_stats_after: Optional[int] = None) -> DriveReport:
+    """Open-loop driver: arrivals fire at their trace times regardless
+    of service progress (the queue grows when the service falls behind —
+    that is the point), with ``service.poll`` pumped in between.
+
+    * ``clock="wall"`` — trace offsets map onto ``perf_counter`` time:
+      the real load test.  Submission stamps use the *scheduled* arrival
+      time, so a lagging driver loop cannot hide queueing delay.
+    * ``clock="virtual"`` — time advances only through the trace stamps
+      plus fixed ``tick_s`` increments while draining; no sleeping, no
+      wall-clock dependence: with ``ServiceConfig.cost_smoothing=0`` the
+      whole run (batch composition, counters, deadline misses) is a
+      deterministic function of the trace.
+
+    ``reset_stats_after`` resets ``service.stats`` once that many
+    responses have completed — the "after the first coherence interval"
+    steady-state window of the load suite (caches survive the reset).
+    Returns a :class:`DriveReport`; the queue is fully drained on exit
+    (virtual drain keeps ticking the close policy forward rather than
+    force-closing, so deadline/linger semantics stay in force).
+    """
+    if clock not in ("wall", "virtual"):
+        raise ValueError(f"clock must be 'wall' or 'virtual', got {clock!r}")
+    virtual = clock == "virtual"
+    responses: list[SolveResponse] = []
+    did_reset = reset_stats_after is None
+    t_wall0 = time.perf_counter()
+
+    def pump(now):
+        nonlocal did_reset
+        while True:
+            out = service.poll(now if virtual else None)
+            if not out:
+                return
+            responses.extend(out)
+            if not did_reset and len(responses) >= reset_stats_after:
+                service.stats.reset()
+                did_reset = True
+
+    i, now = 0, 0.0
+    while i < len(trace):
+        if virtual:
+            now = trace[i].t
+        else:
+            # busy-wait to the scheduled arrival (sleep granularity on a
+            # loaded runner is worse than the solve cost); poll meanwhile
+            while time.perf_counter() - t_wall0 < trace[i].t:
+                pump(None)
+            now = time.perf_counter() - t_wall0
+        # submit EVERY arrival that is due before polling again: after a
+        # long solve the backlog must enter the queue as one burst, or
+        # the close policy would see (and close) the overdue requests
+        # one at a time instead of batching them
+        while i < len(trace) and trace[i].t <= now:
+            arr = trace[i]
+            service.submit(arr.cell_id, arr.problem,
+                           deadline_s=arr.deadline_s,
+                           now=(arr.t if virtual else t_wall0 + arr.t))
+            i += 1
+        pump(now)
+    # drain: keep advancing the clock so deadline/linger closes fire
+    while service.pending:
+        if virtual:
+            now += tick_s
+        pump(now)
+    wall_s = time.perf_counter() - t_wall0
+    span = max(trace[-1].t, 1e-9) if trace else 1e-9
+    return DriveReport(
+        responses=responses, wall_s=wall_s,
+        offered_rate_hz=len(trace) / span,
+        sustained_rate_hz=len(responses) / max(wall_s, 1e-9))
+
+
+def measure_capacity(service: FleetControlService,
+                     problems: Sequence[WirelessFLProblem], *,
+                     repeats: int = 3) -> float:
+    """Sustained full-batch capacity of the (warmed) service in
+    solves/sec: best-of-``repeats`` forced full-batch steps over
+    ``problems`` (cycled to ``max_batch``).  Pollutes ``service.stats``
+    and the warm caches — call before the measured run and
+    ``service.stats.reset()`` after (the load suite and the openloop
+    bench both do)."""
+    bsz = service.config.max_batch
+    best = float("inf")
+    for r in range(repeats):
+        for i in range(bsz):
+            service.submit(("capacity", r, i), problems[i % len(problems)])
+        t0 = time.perf_counter()
+        while service.pending:
+            service.step()
+        best = min(best, time.perf_counter() - t0)
+    return bsz / best

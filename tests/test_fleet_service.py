@@ -1,16 +1,30 @@
 """Fleet control-plane service (``repro.serve``): correctness of the
 micro-batched, warm-started serving loop against direct solves, cache
-behaviour, slot padding, compatibility grouping and accounting."""
+behaviour, slot padding, compatibility grouping and accounting — plus
+the open-loop control plane: the batch-close policy, deadline stamping
+and miss accounting, priority-lane preemption, `_next_pow2` /
+`latency_percentile` edge semantics, and the AOT warmup guarantee (the
+first post-warmup request pays no trace spike)."""
+import math
+
 import numpy as np
 import pytest
 
 from repro.core import make_problem, sample_problem, slice_round, solve_joint_fused
 from repro.serve import (
+    CLOSE_DEADLINE,
+    CLOSE_FORCED,
+    CLOSE_FULL,
+    CLOSE_LINGER,
     FleetControlService,
     ServiceConfig,
+    ServiceStats,
+    SolveRequest,
     SolveResponse,
+    batch_close_reason,
     quantized_problem_key,
 )
+from repro.serve.fleet_service import _next_pow2
 
 
 def drift_cells(n_cells, n_devices, n_rounds, seed0=0):
@@ -196,3 +210,280 @@ class TestStats:
         # caches survive a stats reset
         (r,) = svc.run([("c", sample_problem(0, 8))])
         assert isinstance(r, SolveResponse) and r.warm_started
+
+
+class TestNextPow2:
+    """`_next_pow2` floor semantics (ISSUE satellite): every bucket the
+    service registers must be a true power of two, including the floor."""
+
+    @pytest.mark.parametrize("n,floor,expect", [
+        (0, 1, 1), (1, 1, 1), (2, 1, 2), (3, 1, 4), (8, 1, 8),
+        (9, 1, 16), (1000, 1, 1024),
+        # the floor itself rounds UP to a power of two
+        (1, 12, 16), (5, 12, 16), (20, 12, 32),
+        (1, 8, 8), (64, 8, 64), (65, 8, 128),
+        (0, 0, 1),
+    ])
+    def test_values(self, n, floor, expect):
+        assert _next_pow2(n, floor) == expect
+
+    def test_always_power_of_two_and_bounds(self):
+        for n in range(0, 70):
+            for floor in (1, 3, 8, 12):
+                b = _next_pow2(n, floor)
+                assert b & (b - 1) == 0 and b >= 1
+                assert b >= n and b >= min(floor, b)  # covers n
+                # minimal: halving would no longer cover max(n, floor, 1)
+                assert b == 1 or b // 2 < max(n, floor, 1)
+
+
+class TestLatencyPercentile:
+    """Empty-window / single-sample / interpolation / window-edge
+    semantics of ``ServiceStats.latency_percentile`` (ISSUE satellite)."""
+
+    def test_empty_window_is_nan_not_zero(self):
+        s = ServiceStats()
+        for q in (0, 50, 99, 100):
+            assert math.isnan(s.latency_percentile(q))
+        assert math.isnan(s.summary()["p50_latency_s"])
+
+    def test_single_sample_every_quantile(self):
+        s = ServiceStats()
+        s.latencies.append(0.25)
+        for q in (0, 50, 99, 100):
+            assert s.latency_percentile(q) == 0.25
+
+    def test_linear_interpolation(self):
+        s = ServiceStats()
+        s.latencies.extend([0.0, 1.0])
+        assert s.latency_percentile(50) == 0.5      # midpoint of 2 samples
+        s.latencies.append(2.0)
+        assert s.latency_percentile(50) == 1.0
+        assert s.latency_percentile(25) == 0.5
+        assert s.latency_percentile(100) == 2.0
+
+    def test_window_edge_evicts_oldest(self):
+        s = ServiceStats(latency_window=4)
+        for v in [100.0, 100.0, 1.0, 2.0, 3.0, 4.0]:
+            s.latencies.append(v)
+        # the two 100.0 outliers fell off the edge
+        assert s.latency_percentile(100) == 4.0
+        assert s.latency_percentile(50) == 2.5
+
+    def test_reset_returns_to_nan(self):
+        s = ServiceStats()
+        s.latencies.append(1.0)
+        s.reset()
+        assert math.isnan(s.latency_percentile(50))
+
+
+def _req(seq, t_submit, deadline=math.inf, ckey=0, priority=False):
+    """A synthetic queue entry for pure policy tests (no solve)."""
+    return SolveRequest(cell_id=seq, problem=None, t_submit=t_submit,
+                        t_deadline=deadline, priority=priority,
+                        fkey=None, ckey=ckey, seq=seq)
+
+
+class TestClosePolicy:
+    """Deterministic unit tests of ``batch_close_reason`` — the
+    hypothesis suite (tests/test_openloop_properties.py) generalises
+    these to random batches."""
+
+    CFG = ServiceConfig(max_batch=4, close_safety=1.5, max_linger_s=5e-3)
+
+    def test_empty_batch_never_closes(self):
+        assert batch_close_reason([], 0.0, 1.0, self.CFG) is None
+
+    def test_full_wins(self):
+        batch = [_req(i, 0.0) for i in range(4)]
+        assert batch_close_reason(batch, 0.0, 1e-3, self.CFG) == CLOSE_FULL
+
+    def test_deadline_close_at_safety_margin(self):
+        batch = [_req(0, 0.0, deadline=1.0)]
+        # budget 1.0 > 1.5 * cost 0.1 -> keep accumulating
+        assert batch_close_reason(batch, 0.0, 0.1, self.CFG) is None
+        # budget 0.15 == 1.5 * 0.1 -> close now
+        assert batch_close_reason(batch, 0.85, 0.1, self.CFG) == CLOSE_DEADLINE
+        # tightest deadline in the batch governs, not the oldest request
+        batch = [_req(0, 0.0, deadline=10.0), _req(1, 0.1, deadline=1.0)]
+        assert batch_close_reason(batch, 0.85, 0.1, self.CFG) == CLOSE_DEADLINE
+
+    def test_linger_bounds_deadline_less_traffic(self):
+        batch = [_req(0, 0.0)]
+        assert batch_close_reason(batch, 4e-3, 1e-4, self.CFG) is None
+        assert batch_close_reason(batch, 5e-3, 1e-4, self.CFG) == CLOSE_LINGER
+
+    def test_none_means_every_rule_has_slack(self):
+        batch = [_req(0, 0.0, deadline=1.0), _req(1, 1e-3, deadline=2.0)]
+        reason = batch_close_reason(batch, 2e-3, 1e-3, self.CFG)
+        assert reason is None
+        assert len(batch) < self.CFG.max_batch
+        assert min(r.t_deadline for r in batch) - 2e-3 \
+            > self.CFG.close_safety * 1e-3
+        assert 2e-3 - batch[0].t_submit < self.CFG.max_linger_s
+
+
+class TestOpenLoop:
+    """`submit`/`poll` on a virtual clock: deadline stamping, close
+    accounting, miss detection, FIFO, priority preemption, drain."""
+
+    def _svc(self, **kw):
+        base = dict(max_batch=4, cost_smoothing=0.0, prior_solve_s=0.01,
+                    close_safety=1.0, max_linger_s=10.0)
+        base.update(kw)
+        return FleetControlService(ServiceConfig(**base))
+
+    def test_poll_waits_then_deadline_closes(self):
+        svc = self._svc()
+        svc.submit("a", sample_problem(0, 8), deadline_s=1.0, now=0.0)
+        assert svc.poll(0.0) == []          # budget 1.0 > 1.0 * 0.01
+        assert svc.poll(0.5) == []
+        out = svc.poll(0.995)               # budget 0.005 <= est cost 0.01
+        assert [r.cell_id for r in out] == ["a"]
+        assert not out[0].deadline_missed
+        assert out[0].latency_s == pytest.approx(0.995)
+        assert svc.stats.closes == {CLOSE_DEADLINE: 1}
+
+    def test_poll_linger_close(self):
+        svc = self._svc(max_linger_s=5e-3)
+        svc.submit("a", sample_problem(0, 8), now=0.0)   # no deadline
+        assert svc.poll(0.004) == []
+        out = svc.poll(0.006)
+        assert len(out) == 1
+        assert svc.stats.closes == {CLOSE_LINGER: 1}
+
+    def test_poll_full_close_immediate(self):
+        svc = self._svc(max_batch=2)
+        p = sample_problem(0, 8)
+        svc.submit("a", p, deadline_s=100.0, now=0.0)
+        svc.submit("b", p, deadline_s=100.0, now=0.0)
+        out = svc.poll(0.0)
+        assert [r.cell_id for r in out] == ["a", "b"]
+        assert svc.stats.closes == {CLOSE_FULL: 1}
+
+    def test_deadline_miss_accounted(self):
+        svc = self._svc()
+        svc.submit("late", sample_problem(0, 8), deadline_s=0.01, now=0.0)
+        out = svc.poll(5.0)                 # polled far past the deadline
+        assert out[0].deadline_missed
+        assert svc.stats.n_deadline_misses == 1
+        assert svc.stats.deadline_miss_rate == 1.0
+        assert svc.stats.summary()["deadline_miss_rate"] == 1.0
+
+    def test_default_deadline_from_config(self):
+        svc = self._svc(default_deadline_s=0.25)
+        req = svc.submit("a", sample_problem(0, 8), now=1.0)
+        assert req.t_deadline == pytest.approx(1.25)
+        req2 = svc.submit("b", sample_problem(1, 8), now=1.0,
+                          deadline_s=0.5)   # explicit budget overrides
+        assert req2.t_deadline == pytest.approx(1.5)
+
+    def test_unbounded_deadline_is_inf(self):
+        svc = self._svc()
+        req = svc.submit("a", sample_problem(0, 8), now=0.0)
+        assert req.t_deadline == math.inf
+
+    def test_fifo_order_within_lane(self):
+        svc = self._svc(max_batch=2)
+        probs = [sample_problem(i, 8) for i in range(5)]
+        for i, p in enumerate(probs):
+            svc.submit(i, p, now=0.0)
+        out = svc.run()
+        assert [r.cell_id for r in out] == [0, 1, 2, 3, 4]
+        assert [r.seq for r in out] == sorted(r.seq for r in out)
+
+    def test_drifted_cell_preempts_stale_traffic(self):
+        prob = make_problem("drifting_metro", seed=0, n_devices=12,
+                            n_rounds=2, coherence=0.5)
+        r0, r1 = slice_round(prob, 0), slice_round(prob, 1)
+        svc = self._svc(max_batch=1)
+        svc.run([("stale", r0), ("drift", r0)])   # prime both cells
+        # "stale" resubmits the identical round (fkey matches -> normal
+        # lane); "drift" moved a round (fkey went stale -> priority lane)
+        svc.submit("stale", r0, now=0.0)
+        svc.submit("drift", r1, now=0.0)
+        first = svc.step(now=0.0)
+        assert [r.cell_id for r in first] == ["drift"]
+        assert svc.stats.n_preemptions == 1
+        assert first[0].warm_started and not first[0].cache_hit
+        second = svc.step(now=0.0)
+        assert [r.cell_id for r in second] == ["stale"]
+        assert second[0].cache_hit
+        assert svc.stats.n_priority == 1
+
+    def test_explicit_priority_flag(self):
+        svc = self._svc(max_batch=1)
+        p = sample_problem(0, 8)
+        svc.submit("normal", p, now=0.0)
+        svc.submit("vip", sample_problem(1, 8), now=0.0, priority=True)
+        out = svc.step(now=0.0)
+        assert [r.cell_id for r in out] == ["vip"]
+        assert svc.stats.n_preemptions == 1
+
+    def test_fresh_cell_is_not_priority(self):
+        svc = self._svc()
+        req = svc.submit("new-cell", sample_problem(0, 8), now=0.0)
+        assert not req.priority
+
+    def test_drain_terminates_and_serves_exactly_once(self):
+        svc = self._svc(max_batch=2)
+        # incompatible statics interleaved with compatible ones
+        probs = [sample_problem(0, 8), sample_problem(1, 8, tau_th=0.5),
+                 sample_problem(2, 8), sample_problem(3, 8, tau_th=0.5),
+                 sample_problem(4, 8)]
+        for i, p in enumerate(probs):
+            svc.submit(i, p, now=0.0)
+        out = svc.run()
+        assert sorted(r.cell_id for r in out) == [0, 1, 2, 3, 4]
+        assert svc.pending == 0
+        assert all(c == CLOSE_FORCED for c in svc.stats.closes)
+
+    def test_forced_step_empty_queue(self):
+        svc = self._svc()
+        assert svc.step() == []
+        assert svc.poll(0.0) == []
+
+
+class TestWarmup:
+    def test_warmup_registers_pow2_buckets(self):
+        svc = FleetControlService(ServiceConfig(max_batch=2,
+                                                min_device_bucket=8))
+        timings = svc.warmup(sample_problem(0, 20), max_devices=20)
+        assert set(timings) == {8, 16, 32} == svc.warmed_buckets
+        assert all(t > 0 for t in timings.values())
+        # live traffic then only uses warmed buckets
+        svc.run([(0, sample_problem(1, 20)), (1, sample_problem(2, 6))])
+        assert svc.buckets_used <= svc.warmed_buckets
+        # and warmup touched neither stats nor caches
+        assert svc.stats.n_requests == 2
+
+    def test_first_request_after_warmup_no_trace_spike(self):
+        """ISSUE acceptance: the first post-warmup request's latency is
+        within 3x the steady-state p50 — no compile/trace spike.  A
+        unique ``max_iters`` forces fresh jit signatures, so warmup (not
+        an earlier test) is what pre-compiled them."""
+        cells = drift_cells(4, 24, 4, seed0=50)
+        svc = FleetControlService(ServiceConfig(max_batch=4, max_iters=41))
+        svc.warmup(slice_round(cells[0], 0))
+        (first,) = svc.run([(0, slice_round(cells[0], 0))])
+        svc.stats.reset()
+        for k in range(4):
+            svc.run([(c, slice_round(p, k)) for c, p in enumerate(cells)])
+        p50 = svc.stats.latency_percentile(50)
+        # floor p50 at 1ms: a trace spike is O(100ms), scheduler jitter
+        # on a sub-ms p50 is not
+        assert first.latency_s <= 3.0 * max(p50, 1e-3), \
+            f"first={first.latency_s:.4f}s p50={p50:.4f}s"
+
+    def test_unwarmed_first_request_eats_trace(self):
+        """The contrast run: same stream shape, fresh jit signature, no
+        warmup — the first request visibly pays the compile."""
+        cells = drift_cells(4, 24, 4, seed0=60)
+        svc = FleetControlService(ServiceConfig(max_batch=4, max_iters=42))
+        (first,) = svc.run([(0, slice_round(cells[0], 0))])
+        svc.stats.reset()
+        for k in range(4):
+            svc.run([(c, slice_round(p, k)) for c, p in enumerate(cells)])
+        p50 = svc.stats.latency_percentile(50)
+        assert first.latency_s > 10.0 * max(p50, 1e-3), \
+            f"first={first.latency_s:.4f}s p50={p50:.4f}s"

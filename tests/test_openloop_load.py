@@ -1,0 +1,142 @@
+"""Seeded open-loop load tests (slow tier, ``--runslow``).
+
+The end-to-end serving claims of the ISSUE, measured rather than
+assumed:
+
+* **Poisson at 0.8x measured capacity** over ``drifting_metro`` cells
+  sustains **zero deadline misses**, with **warm-fraction >= 0.5** after
+  the first coherence interval (every cell has cached state by then);
+* a **bursty trace** exercises the priority lane: drifted cells jump
+  ahead of stale-tolerant traffic (completion-order inversions against
+  submission order), preemptions are counted, and the run is fully
+  deterministic under the virtual clock.
+
+Wall-clock assertions are deliberately loose (deadline budgets are
+expressed in units of the *measured* batch cost, so they transfer
+across machines); the sharp assertions are the counter-based ones.
+"""
+import pytest
+
+from repro.core import slice_round
+from repro.serve import (
+    FleetControlService,
+    ServiceConfig,
+    bursty_trace,
+    drive,
+    make_cells,
+    measure_capacity,
+    poisson_trace,
+)
+
+pytestmark = pytest.mark.slow
+
+
+class TestPoissonLoad:
+    def test_08x_capacity_sustains_zero_misses_and_warm_cache(self):
+        n_cells, n_req = 4, 160
+        cells = make_cells(n_cells, n_devices=32, n_rounds=10, seed=2)
+        svc = FleetControlService(ServiceConfig(max_batch=8))
+        probe = [slice_round(c, 0) for c in cells]
+        svc.warmup(probe[0], max_devices=32)
+        cap = measure_capacity(svc, probe)
+        svc.stats.reset()
+        assert cap > 0
+
+        # budget = 24 full-batch solve costs at measured capacity: tight
+        # enough to mean something, loose enough to absorb queueing at
+        # 0.8x load plus scheduler hiccups on a shared CI runner
+        deadline = 24.0 * svc.config.max_batch / cap
+        trace = poisson_trace(cells, rate_hz=0.8 * cap, n_requests=n_req,
+                              seed=5, deadline_s=deadline)
+        # the first coherence interval: every cell seen (and cached) once
+        # over ~2 rounds of arrivals; stats reset there -> steady state
+        rep = drive(svc, trace, reset_stats_after=2 * n_cells)
+
+        assert len(rep.responses) == n_req
+        assert not any(r.deadline_missed for r in rep.responses)
+        assert svc.stats.n_deadline_misses == 0
+        # steady state: the drifting stream warm-starts from cached state
+        assert svc.stats.warm_fraction >= 0.5
+        # offered 0.8x capacity must be sustainable (generous margin for
+        # shared CI runners)
+        assert rep.sustained_rate_hz >= 0.4 * rep.offered_rate_hz
+
+    def test_overload_sheds_into_full_batches(self):
+        """Past capacity the close policy must degrade the right way:
+        the backlog fills buckets (full closes dominate), instead of
+        thrashing tiny linger batches."""
+        cells = make_cells(3, n_devices=32, n_rounds=8, seed=7)
+        svc = FleetControlService(ServiceConfig(max_batch=8))
+        probe = [slice_round(c, 0) for c in cells]
+        svc.warmup(probe[0], max_devices=32)
+        cap = measure_capacity(svc, probe)
+        svc.stats.reset()
+
+        trace = poisson_trace(cells, rate_hz=3.0 * cap, n_requests=96,
+                              seed=6)
+        rep = drive(svc, trace)
+        assert len(rep.responses) == 96
+        closes = svc.stats.closes
+        assert closes.get("full", 0) > closes.get("linger", 0)
+        # saturation: mean batch near the full bucket
+        assert svc.stats.n_solved / svc.stats.n_batches >= \
+            0.5 * svc.config.max_batch
+
+
+class TestBurstyPriorityLane:
+    def _run(self):
+        # stale-tolerant traffic: 1-round cells resubmit an identical
+        # problem forever (feature key never moves -> normal lane);
+        # drifting cells move every burst (key drifts -> priority lane)
+        static = make_cells(2, n_devices=12, n_rounds=1, seed=40)
+        drifting = make_cells(2, n_devices=12, n_rounds=6, seed=44,
+                              coherence=0.5)
+        trace = bursty_trace(static + drifting, burst_rate_hz=2000.0,
+                             burst_len=10, n_bursts=3, idle_s=0.05,
+                             seed=9)
+        svc = FleetControlService(ServiceConfig(max_batch=4,
+                                                cost_smoothing=0.0,
+                                                record_batches=True))
+        rep = drive(svc, trace, clock="virtual")
+        return svc, trace, rep
+
+    def test_drifted_cells_preempt_stale_tolerant_traffic(self):
+        svc, trace, rep = self._run()
+        assert len(rep.responses) == len(trace)
+        # the lane machinery actually fired
+        assert svc.stats.n_priority > 0
+        assert svc.stats.n_preemptions >= 1
+        assert any(rec.priority for rec in svc.batch_log)
+        # drifted cells (ids 2,3) jump the queue: some response for a
+        # drifted cell completes before a stale-tolerant request that
+        # was submitted earlier
+        order = [(r.seq, r.cell_id) for r in rep.responses]
+        inverted = any(
+            d_pos < s_pos
+            for d_pos, (d_seq, d_cell) in enumerate(order) if d_cell >= 2
+            for s_pos, (s_seq, s_cell) in enumerate(order)
+            if s_cell < 2 and s_seq < d_seq)
+        assert inverted
+        # and after their cold first round, drifted requests ride the
+        # warm per-cell cache despite the key drift — warmth is only
+        # possible once the cell completed in an *earlier* batch (two
+        # requests of one cell inside the same micro-batch cannot seed
+        # each other), so gate the assertion on the batch log
+        batch_of = {s: bi for bi, rec in enumerate(svc.batch_log)
+                    for s in rec.seqs}
+        first_done = {}
+        for bi, rec in enumerate(svc.batch_log):
+            for c in rec.cell_ids:
+                first_done.setdefault(c, bi)
+        checked = 0
+        for r in rep.responses:
+            if r.cell_id >= 2 and batch_of[r.seq] > first_done[r.cell_id]:
+                assert r.warm_started, r
+                checked += 1
+        assert checked > 0   # the gated assertion actually saw requests
+
+    def test_bursty_run_is_deterministic(self):
+        svc1, _, _ = self._run()
+        svc2, _, _ = self._run()
+        assert svc1.stats.counter_summary() == svc2.stats.counter_summary()
+        assert svc1.batch_log == svc2.batch_log
