@@ -479,6 +479,50 @@ def bench_fleet_service_openloop(full: bool):
          f"mean_batch={s2['solved'] / max(s2['batches'], 1):.2f}")
 
 
+# ------------------------------------------------------- multi-cell
+
+def bench_multicell_solver(full: bool):
+    """The coupled metro solver (``core.multicell``): dual decomposition
+    with ONE element-sharded fused union solve per outer iteration vs the
+    reference python loop of per-cell ``solve_joint_fused`` calls running
+    the same fixed point (``solve_coupled_loop``).
+
+    * the wall-clock pair carries the tentpole ``speedup=`` claim at
+      C=64 cells (gated machine-independently by ``compare.py``);
+    * ``multicell_warm_outer_iters`` pins the warm-dual claim: outer
+      iterations on a tick seeded with the previous tick's duals vs a
+      cold solve.  The counts are deterministic (same scenario seed =>
+      same counts), so the ratio transfers across machines.
+    """
+    from repro.core import solve_coupled, solve_coupled_loop
+    from repro.core.scenarios import make_problem
+
+    c, n = 64, 64
+    mc = make_problem("metro_coupled", seed=0, n_cells=c, n_devices=n)
+
+    cold = solve_coupled(mc)            # compiles, and pins the iter count
+    solve_coupled_loop(mc)              # compiles the per-cell program
+    us_coupled = _timeit(lambda: solve_coupled(mc).batch.a, n=5, warmup=1)
+    us_loop = _timeit(lambda: solve_coupled_loop(mc).batch.a, n=3, warmup=1)
+    emit(f"multicell_coupled_c{c}", us_coupled,
+         f"outer_iters={cold.outer_iters} "
+         f"cells_per_sec={c / (us_coupled / 1e6):.0f} "
+         f"speedup={us_loop / us_coupled:.1f}x")
+    emit(f"multicell_loop_c{c}", us_loop,
+         f"cells_per_sec={c / (us_loop / 1e6):.0f}")
+
+    # deterministic warm-dual claim: outer iterations with/without the
+    # previous tick's duals on the same metro
+    warm = solve_coupled(mc, init=cold.resume)
+    emit("multicell_warm_outer_iters", float(warm.outer_iters),
+         f"residual={warm.residual:.2e} "
+         f"speedup={cold.outer_iters / max(warm.outer_iters, 1):.1f}x")
+    emit("multicell_cold_outer_iters", float(cold.outer_iters),
+         f"mu={float(np.max(np.atleast_1d(np.asarray(cold.mu)))):.3e} "
+         f"load_over_budget="
+         f"{float(np.max(np.atleast_1d(np.asarray(cold.backhaul_load)))) / mc.backhaul_bits:.4f}")
+
+
 # ------------------------------------------------------- closed loop
 
 def bench_closed_loop_throughput(full: bool):
@@ -582,6 +626,7 @@ BENCHES = {
     "fl_sweep_scaling": bench_fl_sweep_scaling,
     "fleet_service_throughput": bench_fleet_service_throughput,
     "fleet_service_openloop": bench_fleet_service_openloop,
+    "multicell_solver": bench_multicell_solver,
     "closed_loop_throughput": bench_closed_loop_throughput,
     "roofline": bench_roofline,
 }

@@ -20,6 +20,16 @@ from repro.core.batch import (
     solve_joint_batch,
     stack_problems,
 )
+from repro.core.multicell import (
+    CoupledDuals,
+    MultiCellProblem,
+    MultiCellSolution,
+    cell_interference,
+    grid_coupling,
+    make_multicell,
+    solve_coupled,
+    solve_coupled_loop,
+)
 from repro.core.optimal import solve_joint_optimal
 from repro.core.power import PowerSolution, analytic_power, dinkelbach_power, energy_bound_ok
 from repro.core.problem import WirelessFLProblem, sample_problem
@@ -57,6 +67,9 @@ __all__ = [
     "JointSolution", "solve_joint", "solve_joint_trace", "solve_joint_optimal",
     "solve_joint_fused", "FleetElements", "problem_elements",
     "fused_fixed_point", "fused_fixed_point_flat",
+    "MultiCellProblem", "MultiCellSolution", "CoupledDuals",
+    "make_multicell", "grid_coupling", "cell_interference",
+    "solve_coupled", "solve_coupled_loop",
     "ParticipationDraw", "SchedulerState",
     "ProbabilisticScheduler", "DeterministicScheduler", "UniformScheduler",
     "EquallyWeightedScheduler", "GreedyChannelScheduler", "LyapunovScheduler",

@@ -126,7 +126,7 @@ class ProblemBatch:
                 v = getattr(self.problem, f.name)
                 if f.name in _PAD_VALUES:
                     v = v[b, :n]
-                elif f.name == "fading":
+                elif f.name in ("fading", "interference"):
                     v = None if v is None else v[b, :n]
                 kw[f.name] = v
             out.append(WirelessFLProblem(**kw))
@@ -173,6 +173,15 @@ def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
             f"{n_fading}/{len(problems)} instances carry fading; fading must "
             "be all-or-none per batch (give static-channel instances "
             "explicit unit fading to mix them in)")
+    n_interf = sum(p.interference is not None for p in problems)
+    if 0 < n_interf < len(problems):
+        raise ValueError(
+            f"{n_interf}/{len(problems)} instances carry interference; "
+            "interference must be all-or-none per batch (give quiet cells "
+            "explicit zero interference to mix them in)")
+    if n_interf and len({p.interference.ndim for p in problems}) > 1:
+        raise ValueError("interference rank ([N] vs [N, K]) must be uniform "
+                         "across the batch")
 
     stacked: dict[str, jax.Array] = {}
     for name, fill in _PAD_VALUES.items():
@@ -182,11 +191,16 @@ def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
     if n_fading:
         fading = jnp.asarray(np.stack(
             [_pad_tail(p.fading, n_max, 1.0) for p in problems]))
+    interference = None
+    if n_interf:
+        interference = jnp.asarray(np.stack(
+            [_pad_tail(p.interference, n_max, 0.0) for p in problems]))
 
     sizes = np.array([p.n_devices for p in problems], np.int32)
     mask = jnp.asarray(np.arange(n_max)[None, :] < sizes[:, None])
     prob = WirelessFLProblem(
         fading=fading,
+        interference=interference,
         **stacked,
         **{f: getattr(ref, f) for f in _STATIC_FIELDS},
     )
@@ -223,6 +237,9 @@ def pad_batch(batch: ProblemBatch, *, batch_size: Optional[int] = None,
         elif f.name == "fading" and v is not None:
             v = jnp.asarray(np.pad(np.asarray(v), [(0, db), (0, dn), (0, 0)],
                                    constant_values=1.0))
+        elif f.name == "interference" and v is not None:
+            pad = [(0, db), (0, dn)] + [(0, 0)] * (np.ndim(v) - 2)
+            v = jnp.asarray(np.pad(np.asarray(v), pad, constant_values=0.0))
         kw[f.name] = v
     mask = jnp.asarray(np.pad(np.asarray(batch.mask), [(0, db), (0, dn)],
                               constant_values=False))

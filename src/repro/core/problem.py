@@ -3,6 +3,8 @@
 Implements the system model of Section II of the paper:
 
 * OFDMA uplink rate  r_ik(P) = B_i log2(1 + P g_ik / (d_i^2 sigma^2))   (g=1 paper)
+  (multi-cell: sigma^2 -> sigma^2 + I_ik with cross-cell interference I,
+  see core.multicell and docs/multicell.md)
 * transmission time  T_ik(P) = S / r_ik(P)                               (eq. 1)
 * computation energy E^c_i   = kappa * C_i * |D_i| * gamma_i^2           (eq. 5)
 * upload energy      E^u_ik  = P_ik * T_ik(P_ik)
@@ -32,7 +34,10 @@ Internally the rule is: broadcast 1-d operands with ``x[:, None]``
 against the ``[N, K]`` path gain, never the reverse — mixing a raw
 ``[N]`` with an ``[N, K]`` array only "works" when K == N (and is then
 silently wrong).  ``core.power`` / ``core.selection`` follow the same
-contract through ``_pg`` / ``_bcast_like``.
+contract through ``_pg`` / ``_bcast_like``.  The contract (with the
+equation-by-equation code map) is documented in docs/equations.md
+("Broadcasting contract"); ``interference`` follows the same rank
+rules as ``fading``.
 """
 from __future__ import annotations
 
@@ -66,6 +71,12 @@ class WirelessFLProblem:
     cpu_hz: jax.Array              # gamma_i
     weights: jax.Array             # w_i, objective weights (sum to 1)
     fading: Optional[jax.Array] = None   # g_ik in (0, inf), [N, K]; None => 1
+    # cross-cell interference power I_ik (W) received at this cell's BS,
+    # [N] or [N, K] (per-round rank-2 requires a fading problem so the
+    # solution rank stays fading-driven); None => 0 (single cell).  Set
+    # by the multi-cell outer loop (core.multicell) — raises the
+    # effective noise floor sigma^2 -> sigma^2 + I_ik in the SINR.
+    interference: Optional[jax.Array] = None
 
     # --- shared constants (static) ---------------------------------------
     grad_size_bits: float = dataclasses.field(default=199_210 * 32.0, metadata=dict(static=True))
@@ -81,13 +92,31 @@ class WirelessFLProblem:
         return int(self.distance_m.shape[0])
 
     def path_gain(self) -> jax.Array:
-        """g_ik / (d_i^2 sigma^2) — the SNR per transmitted watt, [N] or [N,K]."""
+        """g_ik / (d_i^2 (sigma^2 + I_ik)) — SINR per transmitted watt.
+
+        With ``interference=None`` this is the paper's single-cell SNR
+        g/(d^2 sigma^2), shape [N] or [N, K]; the ``interference`` leaf
+        raises the effective noise floor (docs/multicell.md).  The
+        no-interference path is kept byte-identical to the pre-multicell
+        expression so single-cell results cannot drift.
+        """
         g = 1.0 if self.fading is None else self.fading
         d2s = jnp.square(self.distance_m) * self.noise_power
         base = 1.0 / d2s
-        if self.fading is None:
-            return base
-        return g * base[:, None]
+        if self.interference is None:
+            if self.fading is None:
+                return base
+            return g * base[:, None]
+        # d^2 sigma^2 + d^2 I: the I == 0 case reduces to d^2 sigma^2
+        # exactly (adding a true zero is exact in IEEE), so zero
+        # interference matches interference=None bit-for-bit.
+        d2 = jnp.square(self.distance_m)
+        rank = 2 if (self.fading is not None
+                     or self.interference.ndim == 2) else 1
+        iv = _bcast_like(self.interference, rank)
+        denom = _bcast_like(d2s, rank) + _bcast_like(d2, rank) * iv
+        pg = 1.0 / denom
+        return pg if self.fading is None else g * pg
 
     def _pg(self, like: jax.Array) -> jax.Array:
         """path_gain broadcast to the rank of ``like`` ([N] or [N, K])."""

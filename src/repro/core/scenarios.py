@@ -6,7 +6,10 @@ their scenarios — the paper's simulation setup plus beyond-paper workloads
 sparse fleets).  Each registered scenario is a :class:`Scenario` whose
 ``build(seed, **overrides)`` returns one i.i.d. ``WirelessFLProblem`` draw;
 ``make_batch`` stacks many draws into a :class:`repro.core.batch.ProblemBatch`
-for the batched solver.
+for the batched solver.  The multi-cell entries (``metro_coupled``,
+``interference_grid``) instead build a coupled
+:class:`repro.core.multicell.MultiCellProblem` for
+``core.multicell.solve_coupled``.
 
     from repro.core.scenarios import SCENARIOS, make_problem, make_batch
 
@@ -25,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batch import ProblemBatch, stack_problems
+from repro.core.multicell import MultiCellProblem, grid_coupling, make_multicell
 from repro.core.problem import WirelessFLProblem, sample_problem
 
 
@@ -68,8 +72,14 @@ def make_problem(name: str, seed: int = 0, **overrides) -> WirelessFLProblem:
 def make_batch(name: str, n_instances: int, seed: int = 0,
                **overrides) -> ProblemBatch:
     """Stack ``n_instances`` i.i.d. draws (seeds ``seed .. seed+B-1``)."""
-    return stack_problems([make_problem(name, seed + i, **overrides)
-                           for i in range(n_instances)])
+    draws = [make_problem(name, seed + i, **overrides)
+             for i in range(n_instances)]
+    if any(isinstance(d, MultiCellProblem) for d in draws):
+        raise ValueError(
+            f"scenario {name!r} builds a coupled MultiCellProblem; solve "
+            "it with core.multicell.solve_coupled instead of batching "
+            "(its .cells is already a ProblemBatch)")
+    return stack_problems(draws)
 
 
 def make_mixed_batch(names: Sequence[str], seed: int = 0,
@@ -256,6 +266,56 @@ def _drifting_mega_fleet(seed, *, n_devices: int = 100_000,
                                  n_devices, n_rounds, coherence)
     return dataclasses.replace(prob,
                                fading=jnp.asarray(fading, jnp.float32))
+
+
+@register("metro_coupled",
+          "Coupled metro tick: 16 paper-like cells (64 devices each) on a "
+          "4x4 grid, moderate inter-cell interference plus one shared "
+          "backhaul budget sized to bind (~60% of the uncoupled expected "
+          "uplink).  Builds a MultiCellProblem — solve with "
+          "``core.multicell.solve_coupled`` (or "
+          "``FleetControlService.solve_coupled``), not the single-cell "
+          "solvers.",
+          "beyond-paper (cf. Guo et al., arXiv:2205.09306; Yang et al., "
+          "arXiv:1911.02417)", n_devices=16 * 64)
+def _metro_coupled(seed, *, n_cells: int = 16, n_devices: int = 64,
+                   coupling_gain: float = 2e-13, alpha: float = 2.0,
+                   backhaul_fraction: float | None = 0.6,
+                   backhaul_bits: float | None = None,
+                   **kw) -> MultiCellProblem:
+    problems = [sample_problem(seed + 7_001 * c, n_devices, **kw)
+                for c in range(n_cells)]
+    if backhaul_bits is None and backhaul_fraction is not None:
+        # the uncoupled expected uplink is ~2.1 device-uploads per cell
+        # under the paper's energy-budget distribution (weakly dependent
+        # on n_devices: per-device bandwidth shrinks as fleets grow);
+        # 60% of that keeps the knapsack price strictly positive.
+        # backhaul_fraction=None drops the shared budget entirely
+        # (interference coupling only).
+        s_bits = problems[0].grad_size_bits
+        backhaul_bits = backhaul_fraction * 2.1 * n_cells * s_bits
+    return make_multicell(problems,
+                          grid_coupling(n_cells, gain=coupling_gain,
+                                        alpha=alpha),
+                          backhaul_bits=backhaul_bits)
+
+
+@register("interference_grid",
+          "Interference-limited metro: 16 cells (32 devices each) on a "
+          "4x4 grid with strong nearest-neighbour coupling and NO shared "
+          "budget — pure interference fixed point, the regime where the "
+          "dual-decomposition outer loop needs damping.  Builds a "
+          "MultiCellProblem for ``core.multicell.solve_coupled``.",
+          "beyond-paper (cf. Guo et al., arXiv:2205.09306)",
+          n_devices=16 * 32)
+def _interference_grid(seed, *, n_cells: int = 16, n_devices: int = 32,
+                       coupling_gain: float = 1e-12, alpha: float = 2.0,
+                       **kw) -> MultiCellProblem:
+    problems = [sample_problem(seed + 7_001 * c, n_devices, **kw)
+                for c in range(n_cells)]
+    return make_multicell(problems,
+                          grid_coupling(n_cells, gain=coupling_gain,
+                                        alpha=alpha))
 
 
 @register("sparse_energy_starved",

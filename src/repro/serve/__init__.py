@@ -16,6 +16,7 @@ from repro.serve.fleet_service import (
     CLOSE_LINGER,
     BatchRecord,
     BucketCostModel,
+    CoupledResponse,
     FleetControlService,
     ServiceConfig,
     ServiceStats,
@@ -37,6 +38,7 @@ from repro.serve.load_gen import (
 __all__ = [
     "FleetControlService", "ServiceConfig", "ServiceStats",
     "SolveRequest", "SolveResponse", "BatchRecord", "BucketCostModel",
+    "CoupledResponse",
     "batch_close_reason", "quantized_problem_key",
     "CLOSE_FULL", "CLOSE_DEADLINE", "CLOSE_LINGER", "CLOSE_FORCED",
     "Arrival", "DriveReport", "make_cells", "poisson_trace",

@@ -79,6 +79,13 @@ from repro.core.batch import (
     solve_joint_batch,
     stack_problems,
 )
+from repro.core.multicell import (
+    CoupledDuals,
+    MultiCellProblem,
+    MultiCellSolution,
+    pad_metro,
+)
+from repro.core.multicell import solve_coupled as solve_coupled_core
 from repro.core.problem import WirelessFLProblem
 
 _INF = float("inf")
@@ -142,6 +149,22 @@ class SolveResponse(NamedTuple):
     seq: int = 0                  # the request's submission sequence number
 
 
+class CoupledResponse(NamedTuple):
+    """One served metro tick (:meth:`FleetControlService.solve_coupled`).
+
+    ``solution`` keeps the bucket-padded shapes (padded cells/devices are
+    masked out and carry ``a = 0``); ``n_cells`` is the metro's true cell
+    count — extract per-cell answers with ``solution.batch.instance(c)``
+    for ``c < n_cells``.
+    """
+
+    metro_id: Hashable
+    solution: MultiCellSolution
+    n_cells: int                  # true (unpadded) cell count
+    warm_started: bool            # duals seeded from the previous tick
+    latency_s: float              # submit -> response time
+
+
 class BatchRecord(NamedTuple):
     """One served micro-batch (``ServiceConfig.record_batches``): enough
     to replay the exact solve offline — the golden suites rebuild the
@@ -176,6 +199,9 @@ class ServiceStats:
         self.solve_seconds = 0.0
         self.outer_iters = 0
         self.inner_iters = 0
+        self.n_metro_ticks = 0        # coupled multi-cell ticks served
+        self.metro_outer_iters = 0    # dual-decomposition iterations
+        self.n_metro_warm = 0         # ticks seeded from cached duals
         self.latencies = collections.deque(maxlen=self._window)
 
     # ---- recording (service-internal) ----------------------------------
@@ -194,6 +220,15 @@ class ServiceStats:
             self.n_cache_hits += bool(r.cache_hit)
             self.n_deadline_misses += bool(r.deadline_missed)
             self.latencies.append(r.latency_s)
+
+    def record_metro(self, solve_s: float, outer: int,
+                     warm: bool) -> None:
+        """Account one coupled metro tick (no per-request latency — a
+        tick is a single synchronous call, not queued traffic)."""
+        self.n_metro_ticks += 1
+        self.metro_outer_iters += outer
+        self.n_metro_warm += bool(warm)
+        self.solve_seconds += solve_s
 
     # ---- derived figures ------------------------------------------------
     @property
@@ -249,6 +284,9 @@ class ServiceStats:
             "closes": dict(self.closes),
             "outer_iters": self.outer_iters,
             "inner_iters": self.inner_iters,
+            "metro_ticks": self.n_metro_ticks,
+            "metro_outer_iters": self.metro_outer_iters,
+            "metro_warm": self.n_metro_warm,
         }
 
     def summary(self) -> dict:
@@ -270,6 +308,12 @@ class ServiceStats:
             "mean_outer_iters": (self.outer_iters / self.n_batches
                                  if self.n_batches else 0.0),
             "mean_inner_iters": self.mean_inner_iters,
+            "metro_ticks": self.n_metro_ticks,
+            "mean_metro_outer_iters": (self.metro_outer_iters
+                                       / self.n_metro_ticks
+                                       if self.n_metro_ticks else 0.0),
+            "metro_warm_fraction": (self.n_metro_warm / self.n_metro_ticks
+                                    if self.n_metro_ticks else 0.0),
         }
 
 
@@ -302,6 +346,14 @@ def quantized_problem_key(problem: WirelessFLProblem,
     feats = [getattr(problem, f) for f in _KEY_FIELDS]
     if problem.fading is not None:
         feats.append(problem.fading)
+    if problem.interference is not None:
+        # the noise floor shifts the solution like any other feature;
+        # offset by sigma^2 so log-quantisation stays relative to the
+        # total noise (a zero-interference leaf keys like None modulo
+        # the shape marker below)
+        feats.append(np.asarray(problem.interference, np.float64)
+                     + problem.noise_power)
+        h.update(repr(problem.interference.shape).encode())
     for x in feats:
         q = _quantize(np.asarray(x, np.float64), decimals)
         h.update(repr(q.shape).encode())
@@ -313,7 +365,9 @@ def _compat_key(problem: WirelessFLProblem) -> tuple:
     """Requests sharing this key can be stacked into one ProblemBatch."""
     return (tuple(getattr(problem, f) for f in _STATIC_FIELDS),
             problem.fading is not None,
-            None if problem.fading is None else problem.fading.shape[1])
+            None if problem.fading is None else problem.fading.shape[1],
+            None if problem.interference is None
+            else problem.interference.ndim)
 
 
 def _next_pow2(n: int, floor: int = 1) -> int:
@@ -433,7 +487,11 @@ def _resize_problem(problem: WirelessFLProblem,
     if fad is not None:
         fad = np.asarray(fad)
         fad = jnp.asarray(np.resize(fad, (n,) + fad.shape[1:]))
-    return dataclasses.replace(problem, fading=fad, **kw)
+    itf = problem.interference
+    if itf is not None:
+        itf = np.asarray(itf)
+        itf = jnp.asarray(np.resize(itf, (n,) + itf.shape[1:]))
+    return dataclasses.replace(problem, fading=fad, interference=itf, **kw)
 
 
 class FleetControlService:
@@ -455,6 +513,9 @@ class FleetControlService:
         self._cell_fkey = _LRU(config.cache_size)
         self._cost = BucketCostModel(config.prior_solve_s,
                                      config.cost_smoothing)
+        # per-metro dual/warm state: metro_id -> CoupledDuals of the last
+        # tick (padded bucket shapes; shape-checked on reuse)
+        self._metro_duals = _LRU(config.cache_size)
         self.warmed_buckets: set[int] = set()   # AOT-precompiled buckets
         self.buckets_used: set[int] = set()     # buckets served so far
         self.batch_log: list[BatchRecord] = []  # when record_batches
@@ -616,6 +677,62 @@ class FleetControlService:
         while self.pending:
             out.extend(self.step())
         return out
+
+    # ---------------------------------------------------- coupled metros
+    def solve_coupled(self, metro_id: Hashable, metro: MultiCellProblem, *,
+                      outer_iters: int = 25, outer_tol: float = 1e-3,
+                      damping: float = 0.5) -> CoupledResponse:
+        """Serve one coupled metro tick (``core.multicell.solve_coupled``).
+
+        A metro tick is one synchronous unit of work — C cells coupled by
+        interference and/or a shared backhaul budget cannot be answered
+        per-cell, so it bypasses the per-request queue and runs the
+        dual-decomposition loop directly, reusing the service machinery:
+
+        * **buckets** — the metro is padded to power-of-two (cell,
+          device) slot shapes via :func:`repro.core.multicell.pad_metro`,
+          so jit compiles once per bucket across metros of drifting size;
+        * **warm duals** — the converged ``(I, mu)`` prices and element
+          iterates are cached per ``metro_id`` and seed the next tick
+          (``CoupledDuals``); on a coherent channel the outer loop then
+          collapses to one or two iterations (shape-mismatched state is
+          dropped, so metro reconfigurations just run cold);
+        * **accounting** — ``stats`` gains ``metro_ticks`` /
+          ``metro_outer_iters`` / ``metro_warm`` counters.
+
+        Uses the service's configured method/power solver/warm-start
+        policy; ``outer_*`` and ``damping`` are per-call because the
+        coupling strength is a property of the metro, not the service.
+        """
+        cfg = self.config
+        t0 = time.perf_counter()
+        n_cells = metro.n_cells
+        bucket_c = _next_pow2(n_cells)
+        bucket_n = _next_pow2(metro.cells.n_max, cfg.min_device_bucket)
+        padded = pad_metro(metro, n_cells=bucket_c, n_max=bucket_n)
+        per_round = padded.cells.problem.fading is not None
+        i_shape = (bucket_c, padded.cells.problem.fading.shape[-1]) \
+            if per_round else (bucket_c,)
+        init: Optional[CoupledDuals] = \
+            self._metro_duals.get(metro_id) if cfg.warm_start else None
+        if init is not None and np.shape(init.interference) != i_shape:
+            init = None               # metro resized: run cold
+        sol = solve_coupled_core(
+            padded, outer_iters=outer_iters, outer_tol=outer_tol,
+            damping=damping, method=cfg.method,
+            power_solver=cfg.power_solver, eps=cfg.eps,
+            max_iters=cfg.max_iters, warm_start=cfg.warm_start, init=init)
+        jax.block_until_ready(sol.batch.a)
+        t1 = time.perf_counter()
+        if cfg.warm_start:
+            self._metro_duals.put(metro_id, sol.resume)
+        self.buckets_used.add(bucket_n)
+        self.stats.record_metro(t1 - t0, sol.outer_iters,
+                                warm=init is not None)
+        return CoupledResponse(metro_id=metro_id, solution=sol,
+                               n_cells=n_cells,
+                               warm_started=init is not None,
+                               latency_s=t1 - t0)
 
     # ------------------------------------------------------------- solve
     def _sol_shape(self, batch) -> tuple:

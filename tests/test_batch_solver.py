@@ -113,8 +113,18 @@ class TestBatchAgreement:
 class TestScenarios:
     @pytest.mark.parametrize("name", sorted(SCENARIOS))
     def test_registry_builds_and_solves(self, name):
+        from repro.core.multicell import MultiCellProblem, solve_coupled
+
         # small fleets keep CI fast; every scenario accepts n_devices
         prob = make_problem(name, seed=0, n_devices=16)
+        if isinstance(prob, MultiCellProblem):
+            # multi-cell entries solve through the coupled loop
+            # (tests/test_multicell.py has the full contract)
+            sol = solve_coupled(make_problem(name, seed=0, n_cells=2,
+                                             n_devices=16))
+            assert sol.converged
+            assert float(jnp.sum(sol.batch.objective)) >= 0.0
+            return
         sol = solve_joint(prob)
         assert bool(prob.constraints_satisfied(sol.a, sol.power,
                                                rtol=1e-3).all())

@@ -1,0 +1,366 @@
+"""Coupled multi-cell solver suite (``core.multicell``).
+
+Pins the ISSUE 7 acceptance criteria:
+
+* **identity** — zero coupling + no shared budget: ``solve_coupled``
+  returns the uncoupled union fused solve bitwise (the interference
+  estimate is elided, so it is literally the same compiled program),
+  and agrees with a python loop of per-cell ``solve_joint_fused`` calls
+  to solver tolerance;
+* **convergence** — the dual residual converges below tolerance on the
+  ``metro_coupled`` / ``interference_grid`` registry scenarios;
+* **complementary slackness** — exact (knapsack dual) on the shared
+  backhaul budget: ``mu > 0`` iff the budget binds, and then the load
+  equals the budget;
+* **warm duals** — ``init=prev.resume`` collapses the outer loop
+  tick-to-tick without changing converged solutions;
+* **serving** — ``FleetControlService.solve_coupled`` buckets, caches
+  duals per metro, and accounts ticks.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.alternating import solve_joint_fused
+from repro.core.batch import solve_joint_batch
+from repro.core.multicell import (
+    MultiCellProblem,
+    _knapsack_round,
+    cell_interference,
+    grid_coupling,
+    make_multicell,
+    pad_metro,
+    solve_coupled,
+    solve_coupled_loop,
+)
+from repro.core.problem import sample_problem
+from repro.core.scenarios import SCENARIOS, make_batch, make_problem
+
+C, N = 4, 16
+
+
+def _cells(seed=0, n_cells=C, n_devices=N, **kw):
+    return [sample_problem(seed + 7_001 * c, n_devices, **kw)
+            for c in range(n_cells)]
+
+
+@pytest.fixture(scope="module")
+def uncoupled_mc():
+    return make_multicell(_cells(), np.zeros((C, C)))
+
+
+@pytest.fixture(scope="module")
+def grid_mc():
+    return make_problem("interference_grid", seed=0, n_cells=4,
+                        n_devices=12)
+
+
+@pytest.fixture(scope="module")
+def metro_mc():
+    return make_problem("metro_coupled", seed=0, n_cells=4, n_devices=24,
+                        backhaul_bits=None)
+
+
+# ------------------------------------------------------------- identity
+
+def test_zero_coupling_bitwise_identity(uncoupled_mc):
+    """Zero coupling, no budget: one outer iteration, bitwise equal to
+    the uncoupled union fused solve (same compiled program)."""
+    sol = solve_coupled(uncoupled_mc)
+    ref = solve_joint_batch(uncoupled_mc.cells, method="fused")
+    assert sol.outer_iters == 1
+    assert sol.converged
+    assert sol.residual == 0.0
+    np.testing.assert_array_equal(np.asarray(sol.batch.a),
+                                  np.asarray(ref.a))
+    np.testing.assert_array_equal(np.asarray(sol.batch.power),
+                                  np.asarray(ref.power))
+    np.testing.assert_array_equal(np.asarray(sol.batch.objective),
+                                  np.asarray(ref.objective))
+    assert not sol.interference.any()
+    assert float(np.max(np.abs(sol.mu))) == 0.0
+
+
+def test_zero_coupling_matches_per_cell_fused(uncoupled_mc):
+    """Per-cell agreement: the union solve matches a loop of standalone
+    ``solve_joint_fused`` calls to solver tolerance (XLA compiles
+    different programs for the two shapes, so bitwise is pinned against
+    the same-shape union solve above)."""
+    sol = solve_coupled(uncoupled_mc)
+    for c, prob in enumerate(uncoupled_mc.cells.unstack()):
+        ref = solve_joint_fused(prob)
+        inst = sol.batch.instance(c)
+        np.testing.assert_allclose(np.asarray(inst.a), np.asarray(ref.a),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(inst.power),
+                                   np.asarray(ref.power), atol=1e-5)
+
+
+# ----------------------------------------------------------- validation
+
+def test_make_multicell_validation():
+    cells = _cells(n_cells=2)
+    with pytest.raises(ValueError, match=r"\[2, 2\]"):
+        make_multicell(cells, np.zeros((3, 3)))
+    with pytest.raises(ValueError, match="non-negative"):
+        make_multicell(cells, np.array([[0.0, -1.0], [0.0, 0.0]]))
+    with pytest.raises(ValueError, match="zero diagonal"):
+        make_multicell(cells, np.eye(2))
+    with pytest.raises(ValueError, match="backhaul_bits"):
+        make_multicell(cells, np.zeros((2, 2)), backhaul_bits=0.0)
+    mc = make_multicell(cells, np.zeros((2, 2)))
+    with pytest.raises(ValueError, match="damping"):
+        solve_coupled(mc, damping=0.0)
+    with pytest.raises(ValueError, match="outer_iters"):
+        solve_coupled(mc, outer_iters=0)
+
+
+def test_scenarios_registered():
+    for name in ("metro_coupled", "interference_grid"):
+        assert name in SCENARIOS
+        mc = make_problem(name, seed=1, n_cells=2, n_devices=8)
+        assert isinstance(mc, MultiCellProblem)
+        assert mc.n_cells == 2
+        with pytest.raises(ValueError, match="MultiCellProblem"):
+            make_batch(name, n_instances=2, n_cells=2, n_devices=8)
+    assert SCENARIOS["metro_coupled"](0, n_cells=2, n_devices=8
+                                      ).backhaul_bits is not None
+    assert SCENARIOS["interference_grid"](0, n_cells=2, n_devices=8
+                                          ).backhaul_bits is None
+
+
+def test_grid_coupling_geometry():
+    g = grid_coupling(4, gain=1e-12)
+    assert g.shape == (4, 4)
+    assert np.all(np.diag(g) == 0)
+    assert np.all(g >= 0)
+    # 2x2 grid: nearest neighbours at the full gain, the diagonal pair
+    # attenuated by dist^alpha = 2
+    np.testing.assert_allclose(g[0, 1], 1e-12)
+    np.testing.assert_allclose(g[0, 3], 0.5e-12)
+    np.testing.assert_allclose(g, g.T)
+
+
+# ---------------------------------------------------------- convergence
+
+def test_interference_grid_converges(grid_mc):
+    sol = solve_coupled(grid_mc)
+    assert sol.converged
+    assert sol.residual <= 1e-3
+    assert np.all(sol.interference > 0)
+    # interference can only shrink participation vs the uncoupled solve
+    ref = solve_joint_batch(grid_mc.cells, method="fused")
+    assert float(jnp.sum(sol.batch.a)) < float(jnp.sum(ref.a))
+    # the returned solution is feasible for the interference it reports
+    cells = sol.batch
+    for c, prob in enumerate(grid_mc.cells.unstack()):
+        noisy = dataclasses.replace(
+            prob, interference=jnp.full((prob.n_devices,),
+                                        float(sol.interference[c]),
+                                        jnp.float32))
+        inst = cells.instance(c)
+        ok = noisy.constraints_satisfied(inst.a, inst.power, rtol=1e-3)
+        assert bool(np.all(np.asarray(ok)))
+
+
+def test_interference_fixed_point_consistent(grid_mc):
+    """The reported interference is the fixed point of the reported
+    solution (the KKT primal-consistency condition)."""
+    sol = solve_coupled(grid_mc, outer_tol=1e-4)
+    i_implied = cell_interference(np.asarray(grid_mc.coupling),
+                                  np.asarray(sol.batch.a),
+                                  np.asarray(sol.batch.power))
+    np.testing.assert_allclose(i_implied, sol.interference, rtol=2e-3)
+
+
+def test_metro_coupled_slackness(metro_mc):
+    """The shared budget binds on metro_coupled: mu > 0, load == budget
+    (exact complementary slackness from the knapsack dual)."""
+    sol = solve_coupled(metro_mc)
+    budget = metro_mc.backhaul_bits
+    assert sol.converged
+    load = float(sol.backhaul_load)
+    assert float(sol.mu) > 0.0
+    np.testing.assert_allclose(load, budget, rtol=1e-9)
+    assert load <= budget * (1 + 1e-9)
+    # uncoupled demand genuinely exceeds the budget (the constraint is
+    # active, not vacuous)
+    ref = solve_joint_batch(metro_mc.cells, method="fused")
+    s_bits = metro_mc.cells.problem.grad_size_bits
+    assert float(jnp.sum(ref.a)) * s_bits > budget
+
+
+def test_slack_budget_gives_zero_price(uncoupled_mc):
+    """A budget that never binds: mu == 0 and the caps pass through
+    untouched (slackness from the other side)."""
+    mc = MultiCellProblem(cells=uncoupled_mc.cells,
+                          coupling=uncoupled_mc.coupling,
+                          backhaul_bits=1e18)
+    sol = solve_coupled(mc)
+    ref = solve_joint_batch(uncoupled_mc.cells, method="fused")
+    assert float(np.max(np.abs(sol.mu))) == 0.0
+    assert float(sol.backhaul_load) < 1e18
+    np.testing.assert_array_equal(np.asarray(sol.batch.a),
+                                  np.asarray(ref.a))
+
+
+def test_knapsack_round_optimality():
+    """Unit-level dual certificate: kept weights >= mu >= cut weights,
+    load == budget exactly, caps respected."""
+    rng = np.random.default_rng(0)
+    caps = rng.uniform(0.0, 1.0, 64)
+    w = rng.uniform(0.0, 1.0, 64)
+    s_bits, budget = 10.0, 0.4 * caps.sum() * 10.0
+    a, mu, load = _knapsack_round(caps, w, s_bits, budget)
+    assert mu > 0.0
+    np.testing.assert_allclose(load, budget)
+    np.testing.assert_allclose(a.sum() * s_bits, budget)
+    assert np.all(a <= caps + 1e-12) and np.all(a >= 0)
+    full = a >= caps - 1e-12
+    cut = a <= 1e-12
+    assert np.all(w[full & (caps > 0)] >= mu - 1e-12)
+    assert np.all(w[cut & (caps > 0)] <= mu + 1e-12)
+    # slack budget: untouched caps, zero price
+    a2, mu2, load2 = _knapsack_round(caps, w, s_bits, 1e9)
+    assert mu2 == 0.0
+    np.testing.assert_array_equal(a2, caps)
+    np.testing.assert_allclose(load2, caps.sum() * s_bits)
+
+
+# --------------------------------------------------- reference agreement
+
+def test_loop_reference_agrees(metro_mc):
+    """One union fused solve per outer step == a python loop of per-cell
+    fused solves (to solver tolerance), duals included."""
+    sol = solve_coupled(metro_mc)
+    ref = solve_coupled_loop(metro_mc)
+    assert ref.converged
+    np.testing.assert_allclose(np.asarray(sol.batch.a),
+                               np.asarray(ref.batch.a), atol=1e-5)
+    np.testing.assert_allclose(sol.interference, ref.interference,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.atleast_1d(sol.mu),
+                               np.atleast_1d(ref.mu), atol=1e-6)
+
+
+# ------------------------------------------------------------ warm duals
+
+def test_warm_duals_collapse_outer_loop(metro_mc):
+    cold = solve_coupled(metro_mc)
+    warm = solve_coupled(metro_mc, init=cold.resume)
+    assert warm.converged
+    assert warm.outer_iters == 1
+    np.testing.assert_allclose(np.asarray(warm.batch.a),
+                               np.asarray(cold.batch.a), atol=1e-3)
+    np.testing.assert_allclose(warm.interference, cold.interference,
+                               rtol=1e-2)
+
+
+def test_warm_duals_on_drifted_tick(grid_mc):
+    """Warm duals from tick t seed tick t+1 after a small channel drift:
+    fewer outer iterations, same converged answer as a cold solve."""
+    cold_t0 = solve_coupled(grid_mc)
+    drifted = MultiCellProblem(
+        cells=dataclasses.replace(
+            grid_mc.cells,
+            problem=dataclasses.replace(
+                grid_mc.cells.problem,
+                distance_m=grid_mc.cells.problem.distance_m * 1.01)),
+        coupling=grid_mc.coupling, backhaul_bits=grid_mc.backhaul_bits)
+    cold = solve_coupled(drifted)
+    warm = solve_coupled(drifted, init=cold_t0.resume)
+    assert warm.converged and cold.converged
+    assert warm.outer_iters <= cold.outer_iters
+    np.testing.assert_allclose(np.asarray(warm.batch.a),
+                               np.asarray(cold.batch.a), atol=1e-3)
+
+
+def test_mismatched_warm_state_runs_cold(metro_mc):
+    """Shape-mismatched duals (metro resized) are ignored, not crashed on."""
+    other = make_problem("metro_coupled", seed=3, n_cells=2, n_devices=8)
+    seed = solve_coupled(other).resume
+    sol = solve_coupled(metro_mc, init=seed)
+    assert sol.converged
+
+
+# ------------------------------------------------------------ fading / K
+
+def test_fading_metro_per_round_duals():
+    probs = _cells(seed=5, n_cells=3, n_devices=8, with_fading=True,
+                   n_rounds=4)
+    g = grid_coupling(3, gain=1e-12)
+    s_bits = probs[0].grad_size_bits
+    mc = make_multicell(probs, g, backhaul_bits=1.0 * s_bits)
+    sol = solve_coupled(mc)
+    assert sol.converged
+    assert sol.interference.shape == (3, 4)     # [C, K]
+    assert np.shape(sol.mu) == (4,)             # per-round prices
+    assert np.shape(sol.backhaul_load) == (4,)
+    # complementary slackness per round
+    for k in range(4):
+        slack = mc.backhaul_bits - float(sol.backhaul_load[k])
+        assert float(sol.mu[k]) * slack <= 1e-6 * mc.backhaul_bits
+        assert float(sol.backhaul_load[k]) <= mc.backhaul_bits * (1 + 1e-9)
+
+
+# ------------------------------------------------------------ pad_metro
+
+def test_pad_metro_is_transparent(grid_mc):
+    padded = pad_metro(grid_mc, n_cells=8, n_max=16)
+    assert padded.n_cells == 8
+    assert padded.cells.n_max == 16
+    assert padded.backhaul_bits == grid_mc.backhaul_bits
+    g = np.asarray(padded.coupling)
+    np.testing.assert_array_equal(g[:4, :4], np.asarray(grid_mc.coupling))
+    assert not g[4:, :].any() and not g[:, 4:].any()
+    sol = solve_coupled(padded)
+    ref = solve_coupled(grid_mc)
+    assert sol.converged
+    # padded cells select nothing and radiate nothing
+    assert not np.asarray(sol.batch.a)[4:].any()
+    np.testing.assert_allclose(sol.interference[:4], ref.interference,
+                               rtol=1e-3)
+    for c in range(4):
+        np.testing.assert_allclose(np.asarray(sol.batch.a)[c, :12],
+                                   np.asarray(ref.batch.a)[c], atol=1e-5)
+
+
+# --------------------------------------------------------------- serving
+
+def test_service_solve_coupled_warm_ticks(metro_mc):
+    from repro.serve import FleetControlService, ServiceConfig
+
+    svc = FleetControlService(ServiceConfig())
+    r1 = svc.solve_coupled("m0", metro_mc)
+    r2 = svc.solve_coupled("m0", metro_mc)
+    assert not r1.warm_started and r2.warm_started
+    assert r1.solution.converged and r2.solution.converged
+    assert r2.solution.outer_iters <= r1.solution.outer_iters
+    assert r1.n_cells == metro_mc.n_cells
+    # bucketed: 4 cells -> 4 slots, 24 devices -> 32
+    assert r1.solution.batch.a.shape[0] == 4
+    assert r1.solution.batch.a.shape[1] == 32
+    counters = svc.stats.counter_summary()
+    assert counters["metro_ticks"] == 2
+    assert counters["metro_warm"] == 1
+    assert counters["metro_outer_iters"] >= 2
+    # a different metro id runs cold
+    assert not svc.solve_coupled("m1", metro_mc).warm_started
+    # a resized metro under the same id drops the stale duals
+    small = make_problem("metro_coupled", seed=2, n_cells=2, n_devices=8)
+    assert not svc.solve_coupled("m0", small).warm_started
+
+
+def test_quantized_key_sees_interference():
+    from repro.serve import quantized_problem_key
+
+    prob = sample_problem(0, 8)
+    k0 = quantized_problem_key(prob)
+    with_zero = dataclasses.replace(prob,
+                                    interference=jnp.zeros(8, jnp.float32))
+    strong = dataclasses.replace(
+        prob, interference=jnp.full(8, 1e-10, jnp.float32))
+    assert quantized_problem_key(with_zero) != k0
+    assert quantized_problem_key(strong) != quantized_problem_key(with_zero)

@@ -12,6 +12,8 @@ shims) used to crash with ``Incompatible shapes for broadcasting:
   (regression cases + a hypothesis property over random problems);
 * the 2-d result's column k equals the per-round ``slice_round`` call.
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -130,6 +132,85 @@ def test_per_round_false_rejected_on_fading(fading_problem):
         solve_joint(fading_problem, per_round=False)
     with pytest.raises(ValueError, match="per_round"):
         solve_joint_optimal(fading_problem, per_round=False)
+
+
+# ------------------------------ interference operand (multi-cell, PR 7)
+# the ``interference`` leaf follows the same [N] / [N, K] rank rules as
+# every decision-variable operand — the exact bug class ISSUE 5 fixed —
+# and its zero must be indistinguishable from "no interference"
+
+I_1D = np.geomspace(1e-13, 5e-11, N).astype(np.float32)   # around sigma^2
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+@pytest.mark.parametrize("i_ndim", [1, 2])
+@pytest.mark.parametrize("a_ndim,p_ndim", [(1, 1), (1, 2), (2, 1), (2, 2)])
+def test_interference_rank_combinations(fading_problem, method, i_ndim,
+                                        a_ndim, p_ndim):
+    """All (a, power) rank combinations also work with a 1-d or 2-d
+    interference leaf, and a 1-d leaf equals its column-broadcast 2-d
+    copy bit-for-bit (same round-constant-interference semantics as every
+    other 1-d operand)."""
+    fn = METHODS[method]
+    prob = dataclasses.replace(fading_problem,
+                               interference=_ranked(I_1D, i_ndim))
+    ref_prob = dataclasses.replace(fading_problem,
+                                   interference=_ranked(I_1D, 2))
+    out = fn(prob, _ranked(A_1D, a_ndim), _ranked(P_1D, p_ndim))
+    ref = fn(ref_prob, _ranked(A_1D, 2), _ranked(P_1D, 2))
+    assert out.shape == (N, K)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+@pytest.mark.parametrize("i_ndim", [1, 2])
+def test_zero_interference_is_bitwise_noop(fading_problem, method, i_ndim):
+    """interference = 0 gives the current no-interference results
+    bit-for-bit — multi-cell machinery cannot perturb single-cell
+    answers (the solve_coupled identity guarantee builds on this)."""
+    fn = METHODS[method]
+    zero = dataclasses.replace(
+        fading_problem, interference=_ranked(np.zeros(N, np.float32),
+                                             i_ndim))
+    out = fn(zero, _ranked(A_1D, 1), _ranked(P_1D, 1))
+    ref = fn(fading_problem, _ranked(A_1D, 1), _ranked(P_1D, 1))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_zero_interference_rate_bitwise_static():
+    """The acceptance pin on a static problem too: zero interference ==
+    the current ``rate`` (and path gain) bit-for-bit, shapes unchanged."""
+    prob = make_problem("paper_static", seed=0, n_devices=N)
+    zero = dataclasses.replace(prob,
+                               interference=jnp.zeros((N,), jnp.float32))
+    p1 = jnp.asarray(P_1D)
+    assert zero.path_gain().shape == (N,)
+    np.testing.assert_array_equal(np.asarray(zero.path_gain()),
+                                  np.asarray(prob.path_gain()))
+    np.testing.assert_array_equal(np.asarray(zero.rate(p1)),
+                                  np.asarray(prob.rate(p1)))
+    np.testing.assert_array_equal(np.asarray(zero.p_min(jnp.asarray(A_1D))),
+                                  np.asarray(prob.p_min(jnp.asarray(A_1D))))
+
+
+def test_interference_raises_noise_floor():
+    """Physics sanity: interference strictly lowers rate (and raises
+    p_min) exactly like a higher sigma^2 would — the SINR denominator is
+    d^2 (sigma^2 + I)."""
+    prob = make_problem("paper_static", seed=0, n_devices=N)
+    noisy = dataclasses.replace(prob, interference=jnp.asarray(I_1D))
+    p1 = jnp.asarray(P_1D)
+    assert np.all(np.asarray(noisy.rate(p1)) < np.asarray(prob.rate(p1)))
+    assert np.all(np.asarray(noisy.p_min(jnp.asarray(A_1D)))
+                  > np.asarray(prob.p_min(jnp.asarray(A_1D))))
+    # equivalent single-cell problem with the noise folded in: for a
+    # *uniform* interference level I, sigma^2 + I is just a new sigma^2
+    level = 3e-12
+    uniform = dataclasses.replace(
+        prob, interference=jnp.full((N,), level, jnp.float32))
+    folded = dataclasses.replace(prob, noise_power=prob.noise_power + level)
+    np.testing.assert_allclose(np.asarray(uniform.rate(p1)),
+                               np.asarray(folded.rate(p1)), rtol=1e-6)
 
 
 # --------------------------------------------------- hypothesis property

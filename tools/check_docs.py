@@ -1,0 +1,106 @@
+"""Docs drift gate (CI lint job): fail when the documentation rots.
+
+Three checks, all cheap enough for every PR:
+
+* **links** — every relative markdown link in ``README.md`` and
+  ``docs/*.md`` resolves to a file in the repo (anchors are stripped;
+  ``http(s)``/``mailto`` targets are skipped — CI must not depend on
+  external hosts being up);
+* **code fences** — every ``python``-tagged fence in ``docs/*.md``
+  compiles, and its import statements execute against the installed
+  tree, so documented entry points cannot silently disappear;
+* **scenario coverage** — every name in the ``repro.core.scenarios``
+  registry appears in ``docs/scenarios.md``.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exit code 0 = green, 1 = drift found.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — target up to the first closing paren or whitespace;
+# images (![alt](...)) match the same way and are checked the same way
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _md_files() -> list[Path]:
+    return [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+
+def check_links(problems: list[str]) -> int:
+    n = 0
+    for md in _md_files():
+        for m in _LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:           # pure in-page anchor
+                continue
+            n += 1
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(f"{md.relative_to(REPO)}: broken link "
+                                f"-> {target}")
+    return n
+
+
+def check_code_fences(problems: list[str]) -> int:
+    n = 0
+    for md in sorted((REPO / "docs").glob("*.md")):
+        for i, m in enumerate(_FENCE_RE.finditer(md.read_text()), 1):
+            code, where = m.group(1), f"{md.relative_to(REPO)} fence #{i}"
+            n += 1
+            try:
+                tree = ast.parse(code, where)
+            except SyntaxError as e:
+                problems.append(f"{where}: syntax error: {e}")
+                continue
+            imports = ast.Module(
+                body=[node for node in tree.body
+                      if isinstance(node, (ast.Import, ast.ImportFrom))],
+                type_ignores=[])
+            try:
+                exec(compile(imports, where, "exec"), {})  # noqa: S102
+            except Exception as e:
+                problems.append(f"{where}: import failed: {e!r}")
+    return n
+
+
+def check_scenarios(problems: list[str]) -> int:
+    from repro.core.scenarios import SCENARIOS
+    text = (REPO / "docs" / "scenarios.md").read_text()
+    for name in sorted(SCENARIOS):
+        if name not in text:
+            problems.append(f"docs/scenarios.md: registry scenario "
+                            f"{name!r} is undocumented")
+    return len(SCENARIOS)
+
+
+def main() -> int:
+    problems: list[str] = []
+    n_links = check_links(problems)
+    n_fences = check_code_fences(problems)
+    n_scen = check_scenarios(problems)
+    if problems:
+        print(f"DOCS GATE FAILED ({len(problems)} problem(s)):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"docs gate OK ({n_links} links, {n_fences} python fences, "
+          f"{n_scen} scenarios)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
