@@ -62,7 +62,7 @@ TRACKED_PREFIXES = (
 # tail statistics, not best-of-n microbenchmarks — run-to-run noise on
 # one machine exceeds the 25% threshold.  They are gated by
 # DERIVED_BOUNDS below instead (dimensionless, machine-independent).
-ABSOLUTE_EXEMPT = ("fleet_service_openloop_",)
+ABSOLUTE_EXEMPT = ("fleet_service_openloop_", "fleet_service_faulted_")
 
 # minimum same-machine speedups (parsed from a row's ``speedup=<x>x``
 # derived field).  Kept below the locally measured figures to absorb
@@ -112,6 +112,12 @@ DERIVED_BOUNDS: dict[str, dict[str, tuple[float | None, float | None]]] = {
     "fleet_service_openloop_warmup": {"first_over_p50": (None, 3.0)},
     # the priority lane actually preempts under bursty traffic
     "fleet_service_openloop_bursty": {"preemptions": (1.0, None)},
+    # degraded-mode serving (docs/robustness.md): with 10% of arrivals
+    # corrupted the service must keep >= half the clean throughput —
+    # sanitize copies, retries and cache misses are the honest cost —
+    # and no corruption may ever echo into a response (nan_escapes == 0)
+    "fleet_service_faulted_chaos": {"degraded_throughput_ratio": (0.5, None),
+                                    "nan_escapes": (None, 0.0)},
 }
 
 

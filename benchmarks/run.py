@@ -479,6 +479,65 @@ def bench_fleet_service_openloop(full: bool):
          f"mean_batch={s2['solved'] / max(s2['batches'], 1):.2f}")
 
 
+def bench_fleet_service_faulted(full: bool):
+    """Degraded-mode serving under the seeded chaos harness
+    (``docs/robustness.md``): the same Poisson load driven twice through
+    identically-warmed services — once clean, once with 10% of arrivals
+    corrupted (``FaultPlan``) — so the cost of sanitize + retry +
+    degraded cache locality shows up as one dimensionless ratio:
+
+    * ``_clean``: the fault-free reference drive;
+    * ``_chaos``: the corrupted drive; ``degraded_throughput_ratio``
+      (faulted sustained rate / clean sustained rate) is gated >= 0.5
+      by ``compare.py``, and ``nan_escapes`` — non-finite values in any
+      response — is gated == 0.  Both transfer across machines.
+
+    Wall-clock per-request figures are queue-dependent tail statistics
+    (``ABSOLUTE_EXEMPT``, like the open-loop rows).
+    """
+    from repro.core import slice_round
+    from repro.serve import (FaultPlan, FleetControlService, ServiceConfig,
+                             chaos_drive, drive, make_cells,
+                             measure_capacity, poisson_trace)
+
+    n_cells, n_dev, n_rounds = (8, 64, 12) if full else (6, 48, 8)
+    n_req = 240 if full else 120
+
+    cells = make_cells(n_cells, n_devices=n_dev, n_rounds=n_rounds, seed=0)
+    probe = [slice_round(c, 0) for c in cells]
+
+    def fresh():
+        svc = FleetControlService(ServiceConfig(max_batch=8))
+        svc.warmup(probe[0], max_devices=n_dev)
+        return svc
+
+    cap = measure_capacity(fresh(), probe)
+    trace = poisson_trace(cells, rate_hz=0.6 * cap, n_requests=n_req, seed=1)
+
+    svc = fresh()
+    svc.stats.reset()
+    clean = drive(svc, trace, reset_stats_after=n_req // 4)
+
+    svc2 = fresh()
+    svc2.stats.reset()
+    plan = FaultPlan(seed=3, fault_rate=0.1)   # 10% of arrivals corrupted
+    chaos = chaos_drive(svc2, trace, plan, clock="wall",
+                        reset_stats_after=n_req // 4)
+
+    ratio = chaos.report.sustained_rate_hz / clean.sustained_rate_hz
+    emit("fleet_service_faulted_clean", clean.wall_s / n_req * 1e6,
+         f"solves_per_sec={clean.sustained_rate_hz:.1f} "
+         f"offered_hz={clean.offered_rate_hz:.1f}")
+    emit("fleet_service_faulted_chaos",
+         chaos.report.wall_s / n_req * 1e6,
+         f"degraded_throughput_ratio={ratio:.3f} "
+         f"nan_escapes={chaos.nan_escapes} "
+         f"n_faulted={chaos.n_faulted} "
+         f"unhealthy_devices={chaos.n_unhealthy_devices} "
+         f"retries={chaos.counters['retries']} "
+         f"shed={chaos.counters['shed']}")
+
+
 # ------------------------------------------------------- multi-cell
 
 def bench_multicell_solver(full: bool):
@@ -626,6 +685,7 @@ BENCHES = {
     "fl_sweep_scaling": bench_fl_sweep_scaling,
     "fleet_service_throughput": bench_fleet_service_throughput,
     "fleet_service_openloop": bench_fleet_service_openloop,
+    "fleet_service_faulted": bench_fleet_service_faulted,
     "multicell_solver": bench_multicell_solver,
     "closed_loop_throughput": bench_closed_loop_throughput,
     "roofline": bench_roofline,

@@ -554,9 +554,16 @@ def solve_joint_fused(problem: WirelessFLProblem,
                       chunk_elements: Optional[int] = None,
                       mesh: Optional[jax.sharding.Mesh] = None,
                       shard: bool = False,
+                      sanitize: bool = False,
                       init: Optional[tuple[jax.Array, jax.Array]] = None
                       ) -> JointSolution:
     """Fused single-level Algorithm 2 for one problem (jit-compatible).
+
+    ``sanitize=True`` maps devices with non-finite / out-of-domain
+    constraint data to self-deselecting no-ops (a* = P* = 0) via
+    ``WirelessFLProblem.sanitize`` before solving — the boundary
+    hardening used by the serving path (docs/robustness.md); on healthy
+    input it is bit-identical to ``sanitize=False``.
 
     Matches ``solve_joint`` to solver tolerance (tests assert <= 1e-5 on
     a*, P* and the objective) while running the whole alternation as one
@@ -575,6 +582,8 @@ def solve_joint_fused(problem: WirelessFLProblem,
     above it; the <= 1e-5 agreement guarantee covers the corrected
     formula only.
     """
+    if sanitize:
+        problem, _ = problem.sanitize()
     # per_round=False on a fading problem is rejected by _solution_shape
     # (via problem_elements), one message for every solver entry point
     el = problem_elements(problem, per_round)

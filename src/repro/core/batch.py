@@ -47,7 +47,7 @@ from repro.core.alternating import (
     solve_joint,
 )
 from repro.core.optimal import solve_joint_optimal
-from repro.core.problem import WirelessFLProblem
+from repro.core.problem import NEUTRAL_FILLS, WirelessFLProblem
 
 # static (non-leaf) fields that must be uniform across a batch
 _STATIC_FIELDS = ("grad_size_bits", "noise_power", "p_max", "tau_th",
@@ -56,10 +56,9 @@ _STATIC_FIELDS = ("grad_size_bits", "noise_power", "p_max", "tau_th",
 # fill padded device slots.  Padding is chosen so padded slots are
 # *infeasible at any a > 0* (zero energy budget) yet produce no NaN/inf in
 # any solver: distance 1 m keeps path gain finite, weight 0 removes the
-# slot from every objective.
-_PAD_VALUES = dict(distance_m=1.0, bandwidth_hz=1.0, energy_budget_j=0.0,
-                   dataset_size=1.0, cycles_per_sample=1.0, cpu_hz=1.0,
-                   weights=0.0)
+# slot from every objective.  The same fills sanitize unhealthy devices
+# (``WirelessFLProblem.sanitize``) — one idiom, one source of truth.
+_PAD_VALUES = NEUTRAL_FILLS
 
 
 class BatchSolution(NamedTuple):
@@ -377,8 +376,15 @@ def solve_joint_batch(batch: ProblemBatch,
                       mesh: Optional[jax.sharding.Mesh] = None,
                       chunk_elements: Optional[int] = None,
                       interpret: Optional[bool] = None,
+                      sanitize: bool = False,
                       init: Optional[WarmStart] = None) -> BatchSolution:
     """Solve every instance of ``batch`` in one jitted, device-sharded call.
+
+    ``sanitize=True`` runs ``WirelessFLProblem.sanitize`` over the
+    stacked leaves first: devices with non-finite / out-of-domain data
+    self-deselect (a* = P* = 0, the padded-slot idiom) instead of
+    poisoning the solve; healthy batches are bit-identical to
+    ``sanitize=False`` (docs/robustness.md).
 
     method:
       * ``"alternating"``  — vmap of Algorithm 2 (``solve_joint``); matches
@@ -430,6 +436,9 @@ def solve_joint_batch(batch: ProblemBatch,
     if method not in ("alternating", "fused", "optimal", "kernel",
                       "fused_kernel"):
         raise ValueError(f"unknown method {method!r}")
+    if sanitize:
+        prob, _ = batch.problem.sanitize()
+        batch = dataclasses.replace(batch, problem=prob)
     if init is not None:
         if method not in ("alternating", "fused"):
             raise ValueError(

@@ -108,6 +108,9 @@ def make_multicell(problems: Sequence[WirelessFLProblem] | ProblemBatch,
     if g.shape != (c, c):
         raise ValueError(f"coupling must be [{c}, {c}] for {c} cells, "
                          f"got {g.shape}")
+    if not np.isfinite(g).all():
+        raise ValueError("coupling gains must be finite — a NaN/Inf entry "
+                         "would poison every cell's interference estimate")
     if np.any(g < 0):
         raise ValueError("coupling gains must be non-negative")
     if np.any(np.diag(g) != 0):
@@ -177,6 +180,10 @@ class MultiCellSolution(NamedTuple):
     outer_iters: int          # dual-decomposition iterations run
     residual: float           # final coupled-KKT residual
     converged: bool           # residual <= outer_tol within the budget
+    # True when the outer loop ran out of iterations: the returned state
+    # is then the *best-residual* iterate seen (best-feasible-so-far),
+    # not the last step's — see docs/robustness.md
+    hit_iter_cap: bool = False
 
     @property
     def resume(self) -> CoupledDuals:
@@ -299,6 +306,7 @@ def solve_coupled(mc: MultiCellProblem,
                   mesh: Optional[jax.sharding.Mesh] = None,
                   shard: bool = True,
                   warm_start: bool = True,
+                  sanitize: bool = False,
                   init: Optional[CoupledDuals] = None) -> MultiCellSolution:
     """Dual-decomposition solve of a coupled metro tick.
 
@@ -326,6 +334,13 @@ def solve_coupled(mc: MultiCellProblem,
     casing.  Solutions are init-independent to solver tolerance; only
     outer/inner iteration counts change (the serving claim the
     ``multicell_solver`` bench gates).
+
+    ``sanitize=True`` forwards to ``solve_joint_batch`` (unhealthy
+    devices self-deselect).  If the loop exhausts ``outer_iters`` the
+    returned solution is the **best-residual iterate seen** with
+    ``hit_iter_cap=True`` — degraded but usable, never the last
+    (possibly oscillating) step by accident; converged solves are
+    bit-identical to the pre-flag behaviour.
     """
     cells = mc.cells
     if damping <= 0.0 or damping > 1.0:
@@ -356,11 +371,13 @@ def solve_coupled(mc: MultiCellProblem,
     a_proj: np.ndarray | jax.Array = jnp.zeros(0)
     load = np.zeros(k_rounds) if per_round else np.float64(0.0)
     residual, converged, t = float("inf"), False, 0
+    best = None   # best-residual iterate: (residual, bs, a_proj, mu, load, I)
     for t in range(1, outer_iters + 1):
         bs = solve_joint_batch(
             _with_interference(cells, interference), method=method,
             power_solver=power_solver, eps=eps, max_iters=max_iters,
             chunk_elements=chunk_elements, mesh=mesh, shard=shard,
+            sanitize=sanitize,
             init=warm if warm_start else None)
         if mc.backhaul_bits is None:
             # no projection: keep the solver's arrays untouched so the
@@ -379,6 +396,8 @@ def solve_coupled(mc: MultiCellProblem,
                        _relative_delta(np.atleast_1d(mu),
                                        np.atleast_1d(mu_new)))
         converged = residual <= outer_tol
+        if best is None or residual < best[0]:
+            best = (residual, bs, a_proj, mu_new, load, i_new)
         interference = i_new if converged or damping >= 1.0 \
             else interference + damping * (i_new - interference)
         mu = mu_new
@@ -386,6 +405,12 @@ def solve_coupled(mc: MultiCellProblem,
             warm = bs.resume
         if converged:
             break
+
+    hit_iter_cap = not converged
+    if hit_iter_cap:
+        # iteration cap: hand back the best-residual iterate seen, not
+        # whatever the last (possibly oscillating) step produced
+        residual, bs, a_proj, mu, load, interference = best
 
     if mc.backhaul_bits is None:
         final = bs
@@ -398,7 +423,8 @@ def solve_coupled(mc: MultiCellProblem,
         final = bs._replace(a=a_arr, objective=objective)
     return MultiCellSolution(batch=final, interference=interference, mu=mu,
                              backhaul_load=load, outer_iters=t,
-                             residual=residual, converged=converged)
+                             residual=residual, converged=converged,
+                             hit_iter_cap=hit_iter_cap)
 
 
 @functools.lru_cache(maxsize=32)
@@ -497,4 +523,5 @@ def solve_coupled_loop(mc: MultiCellProblem,
         mask=cells.mask)
     return MultiCellSolution(batch=batch, interference=interference, mu=mu,
                              backhaul_load=load, outer_iters=t,
-                             residual=residual, converged=converged)
+                             residual=residual, converged=converged,
+                             hit_iter_cap=not converged)

@@ -59,7 +59,11 @@ def element_p_min(a, pg, bw, *, s_bits: float, tau: float) -> jax.Array:
     Mirrors ``WirelessFLProblem.p_min`` on raw element arrays.
     """
     exponent = jnp.minimum(a * s_bits / (bw * tau), 120.0)
-    return jnp.expm1(exponent * LN2) / pg
+    num = jnp.expm1(exponent * LN2)
+    # zero/NaN gain (deep fade to zero, corrupted channel): P^min = inf is
+    # the infeasible-device gate — the raw division emits 0 / 0 = NaN at
+    # a = 0 and poisons the fused while-loop (docs/robustness.md)
+    return jnp.where(pg > 0, num / jnp.where(pg > 0, pg, 1.0), jnp.inf)
 
 
 def element_tx_time(power, pg, bw, *, s_bits: float) -> jax.Array:
@@ -113,7 +117,10 @@ def dinkelbach_power_elements(a, pg, bw, *, s_bits: float, tau: float,
     feasible = p_min <= p_max * (1 + 1e-6)
 
     def p_star(lam):
-        p = lam * bw / (a_safe * s_bits * LN2) - 1.0 / pg
+        # pg <= 0 (gated-out element): drop the -1/pg offset instead of
+        # producing -inf/NaN; the clip to [p_lo, p_max] dominates anyway
+        inv_pg = jnp.where(pg > 0, 1.0 / jnp.where(pg > 0, pg, 1.0), 0.0)
+        p = lam * bw / (a_safe * s_bits * LN2) - inv_pg
         return jnp.clip(p, p_lo, p_max)
 
     def lam_of(p):

@@ -50,6 +50,18 @@ import numpy as np
 
 LN2 = float(np.log(2.0))
 
+# neutral per-device fills used to overwrite unhealthy device rows (see
+# ``WirelessFLProblem.sanitize``): a zero energy budget makes every solver
+# self-deselect the slot (a* = 0, P* = 0) while distance/bandwidth 1 keep
+# all closed forms finite, and weight 0 removes it from the objective.
+# ``core.batch._PAD_VALUES`` aliases this dict — padded slots and
+# sanitized devices are the same idiom.
+NEUTRAL_FILLS = dict(distance_m=1.0, bandwidth_hz=1.0, energy_budget_j=0.0,
+                     dataset_size=1.0, cycles_per_sample=1.0, cpu_hz=1.0,
+                     weights=0.0)
+_FADING_FILL = 1.0
+_INTERFERENCE_FILL = 0.0
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -106,7 +118,10 @@ class WirelessFLProblem:
         if self.interference is None:
             if self.fading is None:
                 return base
-            return g * base[:, None]
+            # a corrupted channel draw (g = 0, NaN) against a tiny d2s
+            # must gate the device out (gain 0 => P^min = inf), not emit
+            # 0 * inf = NaN; g > 0 leaves healthy draws bit-identical
+            return jnp.where(g > 0, g * base[:, None], 0.0)
         # d^2 sigma^2 + d^2 I: the I == 0 case reduces to d^2 sigma^2
         # exactly (adding a true zero is exact in IEEE), so zero
         # interference matches interference=None bit-for-bit.
@@ -116,7 +131,9 @@ class WirelessFLProblem:
         iv = _bcast_like(self.interference, rank)
         denom = _bcast_like(d2s, rank) + _bcast_like(d2, rank) * iv
         pg = 1.0 / denom
-        return pg if self.fading is None else g * pg
+        if self.fading is None:
+            return pg
+        return jnp.where(g > 0, g * pg, 0.0)
 
     def _pg(self, like: jax.Array) -> jax.Array:
         """path_gain broadcast to the rank of ``like`` ([N] or [N, K])."""
@@ -179,7 +196,11 @@ class WirelessFLProblem:
         # huge-but-finite P^min (> p_max), which downstream logic treats as
         # "infeasible at this a" rather than producing NaNs.
         exponent = jnp.minimum(exponent, 120.0)
-        return jnp.expm1(exponent * LN2) / pg
+        num = jnp.expm1(exponent * LN2)
+        # zero/NaN gain (deep fade to zero, corrupted channel): P^min = inf
+        # is the infeasible-device gate; the unguarded num / pg emits NaN
+        # at a = 0 (0 / 0) and poisons every downstream update
+        return jnp.where(pg > 0, num / jnp.where(pg > 0, pg, 1.0), jnp.inf)
 
     def objective(self, a: jax.Array) -> jax.Array:
         """Weighted sum of selection probabilities (7a) for one round."""
@@ -206,6 +227,93 @@ class WirelessFLProblem:
         p_ok = (pv >= -1e-12) & (pv <= self.p_max * (1 + rtol))
         a_ok = (av >= -1e-12) & (av <= 1 + rtol)
         return energy_ok & time_ok & p_ok & a_ok
+
+    # ------------------------------------------------ boundary hardening
+
+    def health_mask(self, xp=jnp) -> jax.Array:
+        """Per-device boolean mask, True where every field is well-formed.
+
+        A device is *unhealthy* when any of its constraint data is
+        non-finite, when a strictly-positive quantity (distance,
+        bandwidth, fading gain, dataset size, CPU parameters) is <= 0, or
+        when a non-negative quantity (energy budget, weight,
+        interference) is negative.  Works on single-instance ``[N]``
+        leaves and on batched ``[B, N]`` leaves alike (per-round fading /
+        interference reduce over the trailing round axis: one bad round
+        marks the device — device granularity, see docs/robustness.md).
+
+        ``xp=np`` evaluates on the host (the serving submit path checks
+        every request without a device round-trip); ``xp=jnp`` is
+        jit-compatible.
+        """
+        def finite(x):
+            return xp.isfinite(xp.asarray(x))
+
+        positive = ("distance_m", "bandwidth_hz", "dataset_size",
+                    "cycles_per_sample", "cpu_hz")
+        nonneg = ("energy_budget_j", "weights")
+        ok = None
+        for name in positive + nonneg:
+            x = xp.asarray(getattr(self, name))
+            good = finite(x) & (x > 0 if name in positive else x >= 0)
+            ok = good if ok is None else ok & good
+        rank = xp.asarray(self.distance_m).ndim
+        if self.fading is not None:
+            f = xp.asarray(self.fading)
+            f_ok = finite(f) & (f > 0)
+            if f.ndim > rank:
+                f_ok = f_ok.all(axis=-1)
+            ok = ok & f_ok
+        if self.interference is not None:
+            iv = xp.asarray(self.interference)
+            i_ok = finite(iv) & (iv >= 0)
+            if iv.ndim > rank:
+                i_ok = i_ok.all(axis=-1)
+            ok = ok & i_ok
+        return ok
+
+    def sanitize(self, health: Optional[jax.Array] = None
+                 ) -> tuple["WirelessFLProblem", jax.Array]:
+        """Replace unhealthy device rows with :data:`NEUTRAL_FILLS`.
+
+        Returns ``(problem, health)``.  Sanitized devices self-deselect
+        in every solver (zero energy budget => a* = 0, P* = 0) instead of
+        poisoning the fused while-loop with NaN/Inf; healthy rows pass
+        through bit-for-bit (``where`` with an all-True mask is the
+        identity).  ``health`` defaults to :meth:`health_mask`.
+        """
+        if health is None:
+            health = self.health_mask()
+        health = jnp.asarray(health, bool)
+        repl = {}
+        for name, fill in NEUTRAL_FILLS.items():
+            x = getattr(self, name)
+            repl[name] = jnp.where(health, x, jnp.asarray(fill, x.dtype))
+        rank = self.distance_m.ndim
+        if self.fading is not None:
+            h = health[..., None] if self.fading.ndim > rank else health
+            repl["fading"] = jnp.where(h, self.fading, _FADING_FILL)
+        if self.interference is not None:
+            h = (health[..., None] if self.interference.ndim > rank
+                 else health)
+            repl["interference"] = jnp.where(h, self.interference,
+                                             _INTERFERENCE_FILL)
+        return dataclasses.replace(self, **repl), health
+
+    def validate(self) -> None:
+        """Raise ``ValueError`` naming the unhealthy devices, if any.
+
+        The strict counterpart of :meth:`sanitize` for callers that want
+        malformed input rejected rather than degraded around.
+        """
+        health = np.asarray(self.health_mask(xp=np))
+        if not health.all():
+            bad = np.flatnonzero(~health.reshape(-1))
+            raise ValueError(
+                f"{bad.size} device slot(s) carry non-finite or "
+                f"out-of-domain constraint data (flat indices "
+                f"{bad[:8].tolist()}{'...' if bad.size > 8 else ''}); "
+                "sanitize() degrades them to self-deselecting no-ops")
 
 
 def _bcast_like(x: jax.Array, rank: int) -> jax.Array:

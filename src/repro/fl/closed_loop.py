@@ -49,6 +49,8 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import checkpoint
+from repro.core.alternating import WarmStart
 from repro.core.problem import WirelessFLProblem
 from repro.core.scenarios import make_problem, slice_round
 from repro.core.schedulers import (
@@ -70,6 +72,7 @@ from repro.fl.scan_engine import (
     run_fl_sweep,
     stack_plans,
 )
+from repro.serve.faults import FaultPlan, corrupt_problem, dropout_mask
 from repro.serve.fleet_service import FleetControlService, ServiceConfig
 
 #: the paper-style comparison suite (Sec. V benchmarks + the two
@@ -103,6 +106,16 @@ class ClosedLoopConfig:
     # Sec. II-C completion time: straggler tx time + local compute
     include_compute_time: bool = True
     tau_th: float = 0.5
+    # --- fault tolerance (docs/robustness.md) ---------------------------
+    # chaos injection: channel corruption before the control pass (the
+    # service sanitises it) plus per-trajectory upload dropouts in the
+    # scan engine.  None = the pristine paper experiment, bit-identical
+    # to the pre-fault-tolerance pipeline.
+    fault_plan: Optional[FaultPlan] = None
+    # round-granular crash safety: every solved control round is
+    # checkpointed here, and a restart resumes from the last round with
+    # a bitwise-identical final table.  None = no checkpointing.
+    checkpoint_dir: Optional[str] = None
 
 
 class ControlTrace:
@@ -127,7 +140,8 @@ class ControlTrace:
 def solve_rounds(problem: WirelessFLProblem,
                  service: Optional[FleetControlService] = None,
                  *,
-                 cell_id="cell-0") -> ControlTrace:
+                 cell_id="cell-0",
+                 checkpoint_dir: Optional[str] = None) -> ControlTrace:
     """Drive the online control plane over a drifting trajectory.
 
     Submits ``slice_round(problem, k)`` for k = 0..K-1 one round at a
@@ -135,6 +149,15 @@ def solve_rounds(problem: WirelessFLProblem,
     the per-round ``[N, 1]`` solutions into ``[N, K]`` tables.  Round
     k > 0 warm-starts from round k-1's cached solution (the service's
     cell/feature LRUs), which is where the drift-tracking win lives.
+
+    ``checkpoint_dir`` makes the loop crash-safe at round granularity:
+    every solved round is persisted (``repro.checkpoint.checkpoint``),
+    and a rerun against a non-empty directory restores the completed
+    columns, re-seeds the (fresh) service's warm caches from the last
+    round's solution via :meth:`FleetControlService.seed_cell`, and
+    continues at the next round — warm starts are solution-invariant
+    (they only shorten the iteration), so the resumed table is bitwise
+    identical to the uninterrupted one (``tests/test_closed_loop_faults``).
     """
     if problem.fading is None:
         raise ValueError("solve_rounds needs a fading ([N, K]) problem; "
@@ -142,10 +165,33 @@ def solve_rounds(problem: WirelessFLProblem,
     if service is None:
         service = FleetControlService(ServiceConfig())
     k_rounds = problem.fading.shape[1]
+    n = problem.n_devices
     a_cols, p_cols = [], []
     warm_rounds = inner = outer = 0
     t_solve = 0.0
-    for k in range(k_rounds):
+    start_k = 0
+    if checkpoint_dir is not None:
+        step = checkpoint.latest_step(checkpoint_dir)
+        if step is not None:
+            tmpl = np.zeros((n, step + 1), np.float32)
+            _, trees, _, extra = checkpoint.restore(
+                checkpoint_dir, step,
+                params_template={"a": tmpl, "power": tmpl})
+            a_np = np.asarray(trees["a"])
+            p_np = np.asarray(trees["power"])
+            a_cols = [a_np[:, k] for k in range(step + 1)]
+            p_cols = [p_np[:, k] for k in range(step + 1)]
+            warm_rounds = int(extra["warm_rounds"])
+            inner = int(extra["inner_iters"])
+            outer = int(extra["outer_iters"])
+            t_solve = float(extra["solve_seconds"])
+            # re-seed the warm caches exactly as round ``step``'s solve
+            # left them, so round step+1 warm-starts as if never killed
+            service.seed_cell(cell_id, slice_round(problem, step),
+                              WarmStart(a=jnp.asarray(a_np[:, step:]),
+                                        power=jnp.asarray(p_np[:, step:])))
+            start_k = step + 1
+    for k in range(start_k, k_rounds):
         resp, = service.run([(cell_id, slice_round(problem, k))])
         a_cols.append(np.asarray(resp.solution.a)[:, 0])
         p_cols.append(np.asarray(resp.solution.power)[:, 0])
@@ -153,6 +199,13 @@ def solve_rounds(problem: WirelessFLProblem,
         inner += int(resp.solution.inner_iters)
         outer += int(resp.solution.n_iters)
         t_solve += resp.latency_s
+        if checkpoint_dir is not None:
+            checkpoint.save(
+                checkpoint_dir, k,
+                {"a": np.stack(a_cols, axis=1).astype(np.float32),
+                 "power": np.stack(p_cols, axis=1).astype(np.float32)},
+                extra={"warm_rounds": warm_rounds, "inner_iters": inner,
+                       "outer_iters": outer, "solve_seconds": t_solve})
     return ControlTrace(a=np.stack(a_cols, axis=1),
                         power=np.stack(p_cols, axis=1),
                         warm_rounds=warm_rounds, inner_iters=inner,
@@ -243,6 +296,15 @@ def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
                            n_rounds=config.n_rounds,
                            coherence=config.coherence,
                            tau_th=config.tau_th)
+    plan = config.fault_plan
+    if plan is not None:
+        # seeded channel corruption, one pass per planned channel kind;
+        # the service's submit-time sanitiser is what is under test
+        rng = np.random.default_rng(plan.seed)
+        for kind in plan.channel_kinds:
+            problem = corrupt_problem(problem, kind, rng=rng,
+                                      device_rate=plan.device_rate,
+                                      deep_fade_db=plan.deep_fade_db)
     train, test = make_mnist_like(config.n_train, config.n_test,
                                   seed=config.seed)
     parts = dirichlet_partition(train, config.n_devices, config.beta,
@@ -250,17 +312,26 @@ def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
 
     if service is None:
         service = FleetControlService(config.service)
-    control = solve_rounds(problem, service)
+    control = solve_rounds(problem, service,
+                           checkpoint_dir=config.checkpoint_dir)
+
+    # the training/planning layer needs finite tx/energy tables even for
+    # corrupted devices (health-blind baselines may still select them),
+    # so it consumes the sanitised problem; identity when fault-free
+    plan_problem = problem if plan is None else problem.sanitize()[0]
 
     plans, labels, configs = [], [], []
     states: dict[str, SchedulerState] = {}
     for name in strategies:
-        sch, state = strategy_state(name, problem, control, config)
+        sch, state = strategy_state(name, plan_problem, control, config)
         states[name] = state
         for run in range(max(config.n_seeds, 1)):
             cfg = _fl_config(config, run)
-            plans.append(plan_trajectory(problem, sch, parts, cfg,
-                                         state=state))
+            drops = None if plan is None else dropout_mask(
+                plan.seed + 31 * len(plans), config.n_rounds,
+                config.n_devices, plan.drop_rate)
+            plans.append(plan_trajectory(plan_problem, sch, parts, cfg,
+                                         state=state, drops=drops))
             labels.append(name)
             configs.append(cfg)
 
@@ -283,6 +354,13 @@ def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
         },
         "strategies": {},
     }
+    if plan is not None:
+        health = problem.health_mask(xp=np)
+        out["faults"] = {
+            "plan": dataclasses.asdict(plan),
+            "n_unhealthy_devices": int(health.size) - int(health.sum()),
+            "drop_rate": plan.drop_rate,
+        }
     for name in strategies:
         runs = [_summarise(h, states[name])
                 for h, s in zip(sweep.histories, labels) if s == name]

@@ -97,6 +97,13 @@ class TrajectoryPlan:
     m: jax.Array            # scalar i32 participant count (MODE_UNIFORM)
     unbiased: jax.Array     # scalar bool: alpha_i / a_ik correction
     dataset_id: jax.Array   # scalar i32 row into the stacked train/test sets
+    # [K, N] bool, True = device i's round-k upload is LOST (chaos
+    # injection, ``repro.serve.faults.dropout_mask``): the device is
+    # masked out of the eq.-4 aggregation but its tx/compute energy is
+    # still charged and the round still waits on it — the attempt
+    # happened.  ``None`` (the default) keeps the fault-free compiled
+    # program byte-identical; see docs/robustness.md.
+    drops: Optional[jax.Array] = None
 
     @property
     def n_rounds(self) -> int:
@@ -196,7 +203,8 @@ def plan_trajectory(problem: WirelessFLProblem,
                     config: FLConfig,
                     *,
                     state: Optional[SchedulerState] = None,
-                    dataset_id: int = 0) -> TrajectoryPlan:
+                    dataset_id: int = 0,
+                    drops: Optional[np.ndarray] = None) -> TrajectoryPlan:
     """Build one trajectory's plan, mirroring ``run_fl``'s RNG streams.
 
     ``state`` lets callers reuse one (possibly batched) ``precompute``
@@ -205,6 +213,10 @@ def plan_trajectory(problem: WirelessFLProblem,
     ``np.random.default_rng(config.seed)`` exactly as the reference
     engine does (draws happen only on rounds with at least one
     participant), so the scanned trajectory is reproducible against it.
+
+    ``drops`` is an optional ``[K, N]`` bool upload-loss table (True =
+    the round-k upload from device i never arrives); it rides on the
+    plan and switches the sweep into degraded-aggregation mode.
     """
     if config.uplink_bits is not None:
         raise NotImplementedError(
@@ -252,6 +264,7 @@ def plan_trajectory(problem: WirelessFLProblem,
         m=jnp.int32(m),
         unbiased=jnp.asarray(unbiased),
         dataset_id=jnp.int32(dataset_id),
+        drops=None if drops is None else jnp.asarray(drops, bool),
     )
 
 
@@ -292,6 +305,11 @@ def stack_plans(plans: Sequence[TrajectoryPlan]) -> TrajectoryPlan:
     """Stack per-trajectory plans along a new leading sweep axis."""
     if not plans:
         raise ValueError("stack_plans needs at least one plan")
+    with_drops = sum(p.drops is not None for p in plans)
+    if 0 < with_drops < len(plans):
+        raise ValueError(
+            "cannot stack plans with and without drop tables; give the "
+            "fault-free plans an all-False [K, N] drops array")
     ref = plans[0]
     for p in plans[1:]:
         if (p.n_rounds, p.n_devices, p.batch_idx.shape) != (
@@ -316,6 +334,7 @@ class _Static(NamedTuple):
     use_kernel: bool            # stacked path: masked_aggregate Pallas kernel
     kernel_interpret: bool
     donate: bool
+    faulted: bool               # plan carries a drops table (degraded mode)
 
 
 def _eval_rounds(config: FLConfig) -> tuple[int, ...]:
@@ -347,19 +366,31 @@ def _sweep_fn(static: _Static):
 
         def round_body(carry, xs):
             params, key, cum_t, cum_e = carry
-            a_k, t_k, e_k, idx = xs
+            if static.faulted:
+                a_k, t_k, e_k, idx, drop_k = xs
+            else:
+                (a_k, t_k, e_k, idx), drop_k = xs, None
             key, sub = jax.random.split(key)
             mask = _draw_mask(sub, a_k, plan.mode, plan.m)
             fmask = mask.astype(jnp.float32)
             any_part = jnp.any(mask)
 
             # -- accounting (paper Sec. V-B): straggler tx time, summed E --
+            # charged over the *attempted* mask even in degraded mode: a
+            # lost upload still spent its tx/compute energy and the round
+            # still waited on the straggler (docs/robustness.md)
             t_eff = t_k + plan.comp_time if static.include_compute_time else t_k
             round_time = jnp.where(
                 any_part, jnp.max(jnp.where(mask, t_eff, -jnp.inf)), 0.0)
             round_energy = jnp.sum(jnp.where(mask, e_k, 0.0))
 
             # -- server update (eq. 4) --------------------------------------
+            # degraded mode: survivors = attempted minus lost uploads; only
+            # they enter the aggregation (renormalize redistributes their
+            # weight, else the update is simply smaller)
+            if drop_k is not None:
+                mask = mask & ~drop_k
+                fmask = mask.astype(jnp.float32)
             alpha = plan.agg_weights
             alpha = jnp.where(plan.unbiased,
                               alpha / jnp.maximum(a_k, 1e-6), alpha)
@@ -388,6 +419,8 @@ def _sweep_fn(static: _Static):
                            jnp.sum(mask).astype(jnp.int32))
 
         xs = (plan.probs, plan.tx_time, plan.round_energy, plan.batch_idx)
+        if static.faulted:
+            xs = xs + (plan.drops,)
         carry = (params0, plan.key, jnp.float32(0.0), jnp.float32(0.0))
         ys_parts, accs = [], []
         start = 0
@@ -460,7 +493,8 @@ def run_fl_sweep(plans: TrajectoryPlan,
         aggregate=config.aggregate, renormalize=config.renormalize,
         include_compute_time=config.include_compute_time,
         eval_rounds=_eval_rounds(config), use_kernel=use_kernel,
-        kernel_interpret=kernel_interpret, donate=donate_params)
+        kernel_interpret=kernel_interpret, donate=donate_params,
+        faulted=plans.drops is not None)
     if config.aggregate not in ("fused", "stacked"):
         raise ValueError(f"unknown aggregate mode {config.aggregate!r}")
     if use_kernel and config.aggregate != "stacked":

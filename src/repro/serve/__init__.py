@@ -7,8 +7,21 @@ queue with per-request deadlines, continuous batching (adaptive
 batch-close policy), priority lanes for drifted cells, AOT-warmed jit
 buckets, and warm-started solves from cached previous solutions on
 drifting channels.  ``repro.serve.load_gen`` generates the seeded
-Poisson/bursty traffic and drives the loop.  See ``docs/serving.md``.
+Poisson/bursty traffic and drives the loop; ``repro.serve.faults`` is
+the seeded chaos harness that corrupts it (``docs/robustness.md``).
+See ``docs/serving.md``.
 """
+from repro.serve.faults import (
+    CHANNEL_KINDS,
+    FAULT_KINDS,
+    ChaosReport,
+    FaultPlan,
+    chaos_drive,
+    corrupt_problem,
+    corrupt_trace,
+    count_nonfinite,
+    dropout_mask,
+)
 from repro.serve.fleet_service import (
     CLOSE_DEADLINE,
     CLOSE_FORCED,
@@ -43,4 +56,7 @@ __all__ = [
     "CLOSE_FULL", "CLOSE_DEADLINE", "CLOSE_LINGER", "CLOSE_FORCED",
     "Arrival", "DriveReport", "make_cells", "poisson_trace",
     "bursty_trace", "drive", "measure_capacity",
+    "FaultPlan", "ChaosReport", "FAULT_KINDS", "CHANNEL_KINDS",
+    "chaos_drive", "corrupt_problem", "corrupt_trace", "count_nonfinite",
+    "dropout_mask",
 ]

@@ -1,0 +1,207 @@
+"""Seeded deterministic chaos harness for the fleet control plane.
+
+Production control planes fail in boring, recurring ways: a channel
+estimator emits NaN/Inf gains, a device deep-fades to zero gain or
+drops mid-round, the cost model's estimate excursions, a burst of
+arrivals lands at once.  This module injects exactly those faults into
+the *existing* traffic machinery (``repro.serve.load_gen``) so the
+degraded-mode behaviour the service promises (``docs/robustness.md``)
+is testable, benchmarkable, and reproducible:
+
+* :class:`FaultPlan` — a frozen, seeded description of which fault
+  kinds fire, how often, and how hard.  The same plan replays the same
+  corruption byte-for-byte.
+* :func:`corrupt_problem` — one problem, one fault kind: NaN/Inf gains,
+  zero-gain fades, finite deep fades, whole-device outages.
+* :func:`corrupt_trace` — a seeded pass over a ``load_gen`` trace that
+  corrupts a ``fault_rate`` fraction of arrivals; the output is a plain
+  ``Arrival`` list, so it composes with :func:`repro.serve.load_gen.drive`
+  unchanged.
+* :func:`dropout_mask` — the FL-side fault: a seeded ``[K, N]`` mask of
+  devices whose round-k upload never arrives
+  (``repro.fl.scan_engine``'s degraded aggregation consumes it).
+* :func:`chaos_drive` — drive a service through a corrupted trace and
+  report what leaked: non-finite solutions (must be zero), shed and
+  unconverged responses, sanitised devices.
+
+Faults are *injected* host-side, before ``submit``; what the harness
+checks is that nothing downstream of the boundary ever sees them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import WirelessFLProblem
+from repro.serve.fleet_service import FleetControlService
+from repro.serve.load_gen import Arrival, DriveReport, drive
+
+# fault kinds understood by corrupt_problem / FaultPlan.kinds
+NAN_CHANNEL = "nan_channel"      # estimator emits NaN gains
+INF_CHANNEL = "inf_channel"      # estimator emits +inf gains
+ZERO_GAIN = "zero_gain"          # deep fade all the way to zero
+DEEP_FADE = "deep_fade"          # finite fade: gain * 10^(-db/10)
+DEVICE_DROPOUT = "device_dropout"  # device unreachable (all rounds)
+COST_SPIKE = "cost_spike"        # BucketCostModel estimate excursion
+
+#: the channel-corruption kinds (appliable per problem)
+CHANNEL_KINDS = (NAN_CHANNEL, INF_CHANNEL, ZERO_GAIN, DEEP_FADE,
+                 DEVICE_DROPOUT)
+FAULT_KINDS = CHANNEL_KINDS + (COST_SPIKE,)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded chaos scenario: which faults, how often, how hard.
+
+    ``kinds`` are drawn uniformly per faulted arrival from the plan's
+    channel kinds; ``cost_spike`` (if listed) fires once at drive start
+    (:func:`chaos_drive`).  Identical plans replay identical faults.
+    """
+
+    kinds: tuple = CHANNEL_KINDS
+    seed: int = 0
+    fault_rate: float = 0.1       # fraction of arrivals corrupted
+    device_rate: float = 0.1      # fraction of devices hit per fault
+    deep_fade_db: float = 80.0    # power-domain fade depth
+    cost_spike_factor: float = 50.0  # BucketCostModel.scale argument
+    drop_rate: float = 0.1        # FL upload-dropout rate (dropout_mask)
+
+    @property
+    def channel_kinds(self) -> tuple:
+        return tuple(k for k in self.kinds if k in CHANNEL_KINDS)
+
+
+def corrupt_problem(problem: WirelessFLProblem, kind: str, *,
+                    rng: np.random.Generator,
+                    device_rate: float = 0.1,
+                    deep_fade_db: float = 80.0) -> WirelessFLProblem:
+    """One corrupted copy of ``problem`` (the input is untouched).
+
+    Faults land on the fading table when the problem carries one
+    (random (device, round) entries; ``device_dropout`` zeroes whole
+    device rows), else on ``distance_m`` (NaN/Inf distance, or the
+    distance blow-up equivalent of the fade).  Draws consume ``rng``
+    state — thread one seeded generator through a trace for
+    reproducibility.
+    """
+    if kind not in CHANNEL_KINDS:
+        raise ValueError(f"unknown channel fault kind {kind!r}; "
+                         f"choose from {CHANNEL_KINDS}")
+    n = problem.n_devices
+    k = max(1, int(round(device_rate * n)))
+    idx = rng.choice(n, size=k, replace=False)
+    if problem.fading is not None:
+        arr = np.array(problem.fading, np.float32)
+        col = rng.integers(arr.shape[1], size=k)
+        if kind == NAN_CHANNEL:
+            arr[idx, col] = np.nan
+        elif kind == INF_CHANNEL:
+            arr[idx, col] = np.inf
+        elif kind == ZERO_GAIN:
+            arr[idx, col] = 0.0
+        elif kind == DEEP_FADE:
+            arr[idx, col] *= np.float32(10.0 ** (-deep_fade_db / 10.0))
+        else:                                   # DEVICE_DROPOUT
+            arr[idx, :] = 0.0
+        return dataclasses.replace(problem, fading=jnp.asarray(arr))
+    arr = np.array(problem.distance_m, np.float64)
+    if kind == NAN_CHANNEL:
+        arr[idx] = np.nan
+    elif kind == INF_CHANNEL:
+        arr[idx] = np.inf
+    elif kind == DEEP_FADE:
+        # path gain ~ d^-2: d * 10^(db/20) fades the gain by 10^(-db/10)
+        arr[idx] *= 10.0 ** (deep_fade_db / 20.0)
+    else:                                       # ZERO_GAIN / DEVICE_DROPOUT
+        arr[idx] = np.inf
+    return dataclasses.replace(problem, distance_m=jnp.asarray(arr))
+
+
+def corrupt_trace(trace: Sequence[Arrival],
+                  plan: FaultPlan) -> tuple[list[Arrival], int]:
+    """A seeded corrupted copy of a ``load_gen`` trace.
+
+    Each arrival is faulted with probability ``plan.fault_rate`` by one
+    uniformly drawn channel kind.  Returns ``(trace, n_faulted)``; the
+    output is a plain ``Arrival`` list — feed it to
+    :func:`repro.serve.load_gen.drive` like any other trace.
+    """
+    kinds = plan.channel_kinds
+    if not kinds:
+        return list(trace), 0
+    rng = np.random.default_rng(plan.seed)
+    out, n_faulted = [], 0
+    for arr in trace:
+        if rng.random() < plan.fault_rate:
+            kind = kinds[int(rng.integers(len(kinds)))]
+            out.append(arr._replace(problem=corrupt_problem(
+                arr.problem, kind, rng=rng,
+                device_rate=plan.device_rate,
+                deep_fade_db=plan.deep_fade_db)))
+            n_faulted += 1
+        else:
+            out.append(arr)
+    return out, n_faulted
+
+
+def dropout_mask(seed: int, n_rounds: int, n_devices: int,
+                 rate: float) -> np.ndarray:
+    """Seeded ``[K, N]`` bool mask, True = device i's round-k upload is
+    lost (``repro.fl.scan_engine`` masks it out of the aggregation;
+    the tx energy is still spent — the attempt happened)."""
+    rng = np.random.default_rng(seed)
+    return rng.random((n_rounds, n_devices)) < rate
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """What leaked through one chaos drive (``nan_escapes`` must be 0)."""
+
+    report: DriveReport
+    n_faulted: int                # arrivals corrupted by the plan
+    nan_escapes: int              # responses with non-finite a / power
+    n_unconverged: int
+    n_shed: int
+    n_unhealthy_devices: int
+    counters: dict                # service counter snapshot
+
+
+def count_nonfinite(responses) -> int:
+    """Responses whose solution carries any non-finite a or power — the
+    chaos suite's canary; the boundary guarantees make this 0."""
+    bad = 0
+    for r in responses:
+        a = np.asarray(r.solution.a)
+        p = np.asarray(r.solution.power)
+        bad += not (np.isfinite(a).all() and np.isfinite(p).all())
+    return bad
+
+
+def chaos_drive(service: FleetControlService, trace: Sequence[Arrival],
+                plan: FaultPlan, *, clock: str = "virtual",
+                tick_s: float = 1e-3,
+                reset_stats_after: Optional[int] = None) -> ChaosReport:
+    """Drive ``service`` through a ``plan``-corrupted copy of ``trace``.
+
+    ``cost_spike`` (if planned) scales the service's cost model once
+    before the first arrival — the EWMA then walks the estimates back,
+    which is the recovery path under test.  Everything else reuses
+    :func:`repro.serve.load_gen.drive` verbatim; stats are read off
+    ``service.stats`` after the drain.
+    """
+    faulted, n_faulted = corrupt_trace(trace, plan)
+    if COST_SPIKE in plan.kinds:
+        service._cost.scale(plan.cost_spike_factor)
+    report = drive(service, faulted, clock=clock, tick_s=tick_s,
+                   reset_stats_after=reset_stats_after)
+    stats = service.stats
+    return ChaosReport(
+        report=report, n_faulted=n_faulted,
+        nan_escapes=count_nonfinite(report.responses),
+        n_unconverged=stats.n_unconverged, n_shed=stats.n_shed,
+        n_unhealthy_devices=stats.n_unhealthy_devices,
+        counters=stats.counter_summary())

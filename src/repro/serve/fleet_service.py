@@ -121,6 +121,19 @@ class ServiceConfig:
     #                               freezes the prior (deterministic
     #                               close decisions under a virtual clock)
     record_batches: bool = False  # keep a BatchRecord log (golden tests)
+    # ---- fault tolerance (docs/robustness.md) --------------------------
+    sanitize: bool = True         # map non-finite/non-positive device
+    #                               features to self-deselecting no-ops at
+    #                               submit (WirelessFLProblem.sanitize)
+    retry_unconverged: bool = True  # re-solve an unconverged batch once
+    #                                 through the reference path
+    retry_max_iters: int = 200    # outer-iteration budget of the retry
+    retry_backoff_s: float = 1e-3  # base of the exponential backoff
+    #                                *accounted* per consecutive failure
+    #                                (no sleeping — determinism)
+    breaker_threshold: int = 3    # consecutive failed batches per bucket
+    #                               before the circuit breaker opens
+    breaker_cooldown: int = 8     # batches shed while the breaker is open
 
 
 class SolveRequest(NamedTuple):
@@ -132,6 +145,7 @@ class SolveRequest(NamedTuple):
     fkey: Optional[bytes] = None  # quantised feature key (warm_start only)
     ckey: Optional[tuple] = None  # static-compatibility key (micro-batching)
     seq: int = 0                  # submission order, unique per service
+    n_unhealthy: int = 0          # devices degraded to no-ops at submit
 
 
 class SolveResponse(NamedTuple):
@@ -147,6 +161,15 @@ class SolveResponse(NamedTuple):
     latency_s: float              # submit -> response time (request clock)
     deadline_missed: bool = False  # completed after the request's deadline
     seq: int = 0                  # the request's submission sequence number
+    # ---- health/degradation surface (docs/robustness.md) ---------------
+    converged: bool = True        # the solver reported convergence for
+    #                               this instance (after any retry)
+    n_iters: int = 0              # outer iterations attributed to it
+    n_unhealthy: int = 0          # devices sanitised to no-ops at submit
+    retried: bool = False         # batch was re-solved via the reference
+    #                               path after an unconverged first pass
+    shed: bool = False            # served degraded (cached-or-zero) by an
+    #                               open circuit breaker, not solved
 
 
 class CoupledResponse(NamedTuple):
@@ -202,12 +225,21 @@ class ServiceStats:
         self.n_metro_ticks = 0        # coupled multi-cell ticks served
         self.metro_outer_iters = 0    # dual-decomposition iterations
         self.n_metro_warm = 0         # ticks seeded from cached duals
+        self.n_metro_caps = 0         # ticks returning best-so-far at cap
+        # ---- fault tolerance (docs/robustness.md) -----------------------
+        self.n_unconverged = 0        # responses delivered unconverged
+        self.n_retries = 0            # batches re-solved via reference path
+        self.n_shed = 0               # responses shed by an open breaker
+        self.n_unhealthy_devices = 0  # devices sanitised to no-ops
+        self.breaker_opens = 0        # circuit-breaker open transitions
+        self.retry_backoff_s = 0.0    # accounted (not slept) backoff
         self.latencies = collections.deque(maxlen=self._window)
 
     # ---- recording (service-internal) ----------------------------------
     def record_batch(self, responses, solve_s: float, outer: int,
                      inner: int, reason: str = CLOSE_FORCED,
-                     preempted: bool = False) -> None:
+                     preempted: bool = False,
+                     retried: bool = False) -> None:
         self.n_batches += 1
         self.n_solved += len(responses)
         self.solve_seconds += solve_s
@@ -215,19 +247,24 @@ class ServiceStats:
         self.inner_iters += inner
         self.closes[reason] += 1
         self.n_preemptions += bool(preempted)
+        self.n_retries += bool(retried)
         for r in responses:
             self.n_warm += bool(r.warm_started)
             self.n_cache_hits += bool(r.cache_hit)
             self.n_deadline_misses += bool(r.deadline_missed)
+            self.n_unconverged += not r.converged
+            self.n_shed += bool(r.shed)
+            self.n_unhealthy_devices += int(r.n_unhealthy)
             self.latencies.append(r.latency_s)
 
     def record_metro(self, solve_s: float, outer: int,
-                     warm: bool) -> None:
+                     warm: bool, hit_cap: bool = False) -> None:
         """Account one coupled metro tick (no per-request latency — a
         tick is a single synchronous call, not queued traffic)."""
         self.n_metro_ticks += 1
         self.metro_outer_iters += outer
         self.n_metro_warm += bool(warm)
+        self.n_metro_caps += bool(hit_cap)
         self.solve_seconds += solve_s
 
     # ---- derived figures ------------------------------------------------
@@ -287,6 +324,12 @@ class ServiceStats:
             "metro_ticks": self.n_metro_ticks,
             "metro_outer_iters": self.metro_outer_iters,
             "metro_warm": self.n_metro_warm,
+            "metro_caps": self.n_metro_caps,
+            "unconverged": self.n_unconverged,
+            "retries": self.n_retries,
+            "shed": self.n_shed,
+            "unhealthy_devices": self.n_unhealthy_devices,
+            "breaker_opens": self.breaker_opens,
         }
 
     def summary(self) -> dict:
@@ -314,6 +357,13 @@ class ServiceStats:
                                        if self.n_metro_ticks else 0.0),
             "metro_warm_fraction": (self.n_metro_warm / self.n_metro_ticks
                                     if self.n_metro_ticks else 0.0),
+            "metro_caps": self.n_metro_caps,
+            "unconverged": self.n_unconverged,
+            "retries": self.n_retries,
+            "shed": self.n_shed,
+            "unhealthy_devices": self.n_unhealthy_devices,
+            "breaker_opens": self.breaker_opens,
+            "retry_backoff_s": self.retry_backoff_s,
         }
 
 
@@ -450,6 +500,16 @@ class BucketCostModel:
         self._est[bucket] = seconds if prev is None else \
             (1.0 - self.alpha) * prev + self.alpha * seconds
 
+    def scale(self, factor: float) -> None:
+        """Multiply the prior and every estimate by ``factor`` — the
+        chaos harness's cost-spike hook (``repro.serve.faults``): an
+        inflated estimate makes the close policy fire CLOSE_DEADLINE
+        early, which is exactly how a real cost-model excursion degrades
+        batching.  Measurements pull the estimates back (EWMA)."""
+        self.prior_s *= float(factor)
+        for bucket in self._est:
+            self._est[bucket] *= float(factor)
+
 
 class _LRU:
     """Tiny ordered-dict LRU (host-side; values are small jnp arrays)."""
@@ -520,6 +580,10 @@ class FleetControlService:
         self.buckets_used: set[int] = set()     # buckets served so far
         self.batch_log: list[BatchRecord] = []  # when record_batches
         self._seq = 0
+        # per-bucket circuit breaker: consecutive unconverged batches,
+        # and remaining shed-batches while the breaker is open
+        self._fail_streak: dict[int, int] = {}
+        self._breaker_open: dict[int, int] = {}
 
     # ------------------------------------------------------------- warmup
     def warmup(self, template: WirelessFLProblem, *,
@@ -575,9 +639,25 @@ class FleetControlService:
         past the quantisation step and jumps the priority lane (its
         cached answer is the most urgently wrong one).  ``now`` pins the
         arrival stamp for virtual-clock runs.
+
+        With ``ServiceConfig.sanitize`` (the default), devices whose
+        features are non-finite or non-positive — a corrupted channel, a
+        deep fade to zero gain — are degraded to self-deselecting no-ops
+        (``a = 0``, zero power) *before* the request enters the queue,
+        so one poisoned device cannot NaN a whole micro-batch.  The
+        count lands on ``SolveRequest.n_unhealthy`` and the response;
+        a fully healthy problem takes this path untouched (bitwise).
         """
         now = time.perf_counter() if now is None else now
         cfg = self.config
+        n_unhealthy = 0
+        if cfg.sanitize:
+            # host-side health check first: the all-healthy hot path
+            # never allocates a sanitised copy
+            health = problem.health_mask(xp=np)
+            if not health.all():
+                n_unhealthy = int(health.size) - int(health.sum())
+                problem, _ = problem.sanitize(health=jnp.asarray(health))
         fkey = quantized_problem_key(problem, cfg.quant_decimals) \
             if cfg.warm_start else None
         if priority is None:
@@ -590,7 +670,8 @@ class FleetControlService:
             cell_id=cell_id, problem=problem, t_submit=now,
             t_deadline=_INF if deadline_s is None else now + deadline_s,
             priority=bool(priority), fkey=fkey,
-            ckey=_compat_key(problem), seq=self._seq)
+            ckey=_compat_key(problem), seq=self._seq,
+            n_unhealthy=n_unhealthy)
         self.stats.n_requests += 1
         self.stats.n_priority += bool(req.priority)
         (self._prio if req.priority else self._queue).append(req)
@@ -678,6 +759,34 @@ class FleetControlService:
             out.extend(self.step())
         return out
 
+    # ------------------------------------------------------------ resume
+    def seed_cell(self, cell_id: Hashable, problem: WirelessFLProblem,
+                  solution) -> None:
+        """Re-seed the warm caches from an externally held solution.
+
+        The crash-recovery hook (``fl.closed_loop`` checkpoint resume):
+        a fresh service re-seeded with round k's checkpointed problem
+        and solution warm-starts round k+1 exactly as the uninterrupted
+        service would have — same seeds, same warm/cache-hit counters.
+        ``solution`` is anything with ``.a`` / ``.power`` (a
+        :class:`~repro.core.alternating.JointSolution` or ``WarmStart``).
+        No-op when warm starts are disabled.
+        """
+        if not self.config.warm_start:
+            return
+        if self.config.sanitize:
+            # mirror submit(): the caches are keyed on the sanitised
+            # problem, so the seed must be too
+            health = problem.health_mask(xp=np)
+            if not health.all():
+                problem, _ = problem.sanitize(health=jnp.asarray(health))
+        fkey = quantized_problem_key(problem, self.config.quant_decimals)
+        state = WarmStart(a=jnp.asarray(solution.a),
+                          power=jnp.asarray(solution.power))
+        self._feature_cache.put(fkey, state)
+        self._cell_cache.put(cell_id, state)
+        self._cell_fkey.put(cell_id, fkey)
+
     # ---------------------------------------------------- coupled metros
     def solve_coupled(self, metro_id: Hashable, metro: MultiCellProblem, *,
                       outer_iters: int = 25, outer_tol: float = 1e-3,
@@ -721,14 +830,16 @@ class FleetControlService:
             padded, outer_iters=outer_iters, outer_tol=outer_tol,
             damping=damping, method=cfg.method,
             power_solver=cfg.power_solver, eps=cfg.eps,
-            max_iters=cfg.max_iters, warm_start=cfg.warm_start, init=init)
+            max_iters=cfg.max_iters, warm_start=cfg.warm_start, init=init,
+            sanitize=cfg.sanitize)
         jax.block_until_ready(sol.batch.a)
         t1 = time.perf_counter()
         if cfg.warm_start:
             self._metro_duals.put(metro_id, sol.resume)
         self.buckets_used.add(bucket_n)
         self.stats.record_metro(t1 - t0, sol.outer_iters,
-                                warm=init is not None)
+                                warm=init is not None,
+                                hit_cap=sol.hit_iter_cap)
         return CoupledResponse(metro_id=metro_id, solution=sol,
                                n_cells=n_cells,
                                warm_started=init is not None,
@@ -757,6 +868,44 @@ class FleetControlService:
             return seed, False
         return None, False
 
+    def _shed(self, reqs: list[SolveRequest], reason: str, bucket: int, *,
+              priority_lane: bool,
+              now: Optional[float] = None) -> list[SolveResponse]:
+        """Degraded service while the bucket's circuit breaker is open:
+        answer from the per-cell cache where a shape-matched solution
+        exists, zeros (total self-deselection) otherwise — never a solve.
+        Every response carries ``shed=True`` and ``converged=False``; the
+        drain loops keep their liveness (requests always complete)."""
+        t_done = time.perf_counter() if now is None else now
+        responses = []
+        for req in reqs:
+            n = req.problem.n_devices
+            shape = (n,) if req.problem.fading is None \
+                else (n, req.problem.fading.shape[1])
+            seed = self._cell_cache.get(req.cell_id)
+            cached = seed is not None and seed.a.shape == shape
+            a = np.asarray(seed.a) if cached else np.zeros(shape, np.float32)
+            p = np.asarray(seed.power) if cached \
+                else np.zeros(shape, np.float32)
+            inst = JointSolution(
+                a=jnp.asarray(a), power=jnp.asarray(p),
+                objective=jnp.float32(0.0), n_iters=jnp.int32(0),
+                converged=jnp.asarray(False), inner_iters=jnp.int32(0))
+            responses.append(SolveResponse(
+                cell_id=req.cell_id, solution=inst, warm_started=cached,
+                cache_hit=False, latency_s=t_done - req.t_submit,
+                deadline_missed=t_done > req.t_deadline, seq=req.seq,
+                converged=False, n_iters=0, n_unhealthy=req.n_unhealthy,
+                retried=False, shed=True))
+        if self.config.record_batches:
+            self.batch_log.append(BatchRecord(
+                seqs=tuple(r.seq for r in reqs),
+                cell_ids=tuple(r.cell_id for r in reqs),
+                n_bucket=bucket, reason=reason, priority=priority_lane))
+        self.stats.record_batch(responses, 0.0, 0, 0, reason=reason,
+                                preempted=False)
+        return responses
+
     def _serve(self, reqs: list[SolveRequest], reason: str, *,
                priority_lane: bool,
                now: Optional[float] = None) -> list[SolveResponse]:
@@ -765,10 +914,17 @@ class FleetControlService:
         virtual = now is not None
         # a priority batch preempts whenever normal traffic is left waiting
         preempted = priority_lane and bool(self._queue)
+        bucket = _next_pow2(max(r.problem.n_devices for r in reqs),
+                            cfg.min_device_bucket)
+        # open circuit breaker: shed this batch, burn one cooldown tick;
+        # at zero the next batch is the half-open probe (a real solve)
+        if self._breaker_open.get(bucket, 0) > 0:
+            self._breaker_open[bucket] -= 1
+            return self._shed(reqs, reason, bucket,
+                              priority_lane=priority_lane, now=now)
         t0 = time.perf_counter()
 
         batch = stack_problems([r.problem for r in reqs])
-        bucket = _next_pow2(batch.n_max, cfg.min_device_bucket)
         batch = pad_batch(batch, batch_size=cfg.max_batch, n_max=bucket)
         sizes = [r.problem.n_devices for r in reqs]
 
@@ -797,6 +953,37 @@ class FleetControlService:
 
         sol = self._solve(batch, init=init)
         jax.block_until_ready(sol.a)
+
+        # graceful degradation: an unconverged batch gets ONE retry
+        # through the reference path (alternating + Dinkelbach) with a
+        # larger iteration budget; its result is taken wholesale.  The
+        # fast path stays bitwise untouched for converged batches.
+        retried = False
+        conv_real = np.asarray(sol.converged)[:len(reqs)]
+        if cfg.retry_unconverged and not conv_real.all():
+            retried = True
+            sol = solve_joint_batch(batch, method="alternating",
+                                    power_solver="dinkelbach",
+                                    eps=cfg.eps,
+                                    max_iters=cfg.retry_max_iters,
+                                    init=init)
+            jax.block_until_ready(sol.a)
+            conv_real = np.asarray(sol.converged)[:len(reqs)]
+
+        # per-bucket circuit breaker: consecutive still-unconverged
+        # batches accumulate exponential backoff (accounted, never
+        # slept — determinism) and eventually open the breaker
+        if conv_real.all():
+            self._fail_streak[bucket] = 0
+        else:
+            streak = self._fail_streak.get(bucket, 0) + 1
+            self._fail_streak[bucket] = streak
+            self.stats.retry_backoff_s += \
+                cfg.retry_backoff_s * (2.0 ** (min(streak, 24) - 1))
+            if streak >= cfg.breaker_threshold:
+                self._breaker_open[bucket] = cfg.breaker_cooldown
+                self.stats.breaker_opens += 1
+
         t1 = time.perf_counter()
         self._cost.observe(bucket, t1 - t0)
         self.buckets_used.add(bucket)
@@ -829,12 +1016,16 @@ class FleetControlService:
                 cell_id=req.cell_id, solution=inst,
                 warm_started=warm_flags[i], cache_hit=hit_flags[i],
                 latency_s=t_done - req.t_submit,
-                deadline_missed=t_done > req.t_deadline, seq=req.seq))
+                deadline_missed=t_done > req.t_deadline, seq=req.seq,
+                converged=bool(conv_np[i]),
+                n_iters=int(outer_np[i] if outer_np.ndim else outer_np),
+                n_unhealthy=req.n_unhealthy, retried=retried))
         if cfg.record_batches:
             self.batch_log.append(BatchRecord(
                 seqs=tuple(r.seq for r in reqs),
                 cell_ids=tuple(r.cell_id for r in reqs),
                 n_bucket=bucket, reason=reason, priority=priority_lane))
         self.stats.record_batch(responses, t1 - t0, outer, inner,
-                                reason=reason, preempted=preempted)
+                                reason=reason, preempted=preempted,
+                                retried=retried)
         return responses

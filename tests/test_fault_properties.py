@@ -1,0 +1,98 @@
+"""Property-based chaos tests (requires ``hypothesis``; skipped if absent).
+
+Under *any* seeded ``FaultPlan`` the control plane must uphold three
+invariants:
+
+1. every response carries finite selection probabilities and powers —
+   corruption is absorbed at the ``submit()`` boundary, never echoed;
+2. every arrival gets exactly one response (degrade, never hang);
+3. a fault-free request sharing the service with faulted cohabitants is
+   answered as if they were not there — bitwise when the cohabitant is
+   fully corrupted (it sanitises to neutral padding rows), and to
+   solver tolerance otherwise (see ``docs/robustness.md``).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.scenarios import make_problem, slice_round  # noqa: E402
+from repro.serve import (  # noqa: E402
+    CHANNEL_KINDS,
+    FaultPlan,
+    FleetControlService,
+    ServiceConfig,
+    chaos_drive,
+    corrupt_problem,
+    make_cells,
+    poisson_trace,
+)
+
+N = 8
+
+fault_plans = st.builds(
+    FaultPlan,
+    kinds=st.sets(st.sampled_from(CHANNEL_KINDS), min_size=1).map(tuple),
+    seed=st.integers(0, 2**16),
+    fault_rate=st.floats(0.05, 1.0),
+    device_rate=st.floats(0.05, 1.0),
+    deep_fade_db=st.floats(20.0, 120.0),
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(plan=fault_plans, trace_seed=st.integers(0, 2**16))
+def test_chaos_drive_finite_and_complete(plan, trace_seed):
+    cells = make_cells(2, n_devices=N, n_rounds=2, seed=0)
+    trace = poisson_trace(cells, rate_hz=500.0, n_requests=8,
+                          seed=trace_seed)
+    svc = FleetControlService(ServiceConfig())
+    rep = chaos_drive(svc, trace, plan)
+    assert len(rep.report.responses) == len(trace)
+    assert rep.nan_escapes == 0
+    for r in rep.report.responses:
+        assert np.isfinite(np.asarray(r.solution.a)).all()
+        assert np.isfinite(np.asarray(r.solution.power)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(kind=st.sampled_from(CHANNEL_KINDS), seed=st.integers(0, 2**16))
+def test_fully_faulted_cohabitant_is_bitwise_invisible(kind, seed):
+    prob = slice_round(make_problem("drifting_metro", seed=0,
+                                    n_devices=N, n_rounds=2), 0)
+    bad = corrupt_problem(prob, kind, rng=np.random.default_rng(seed),
+                          device_rate=1.0)
+    solo, = FleetControlService(ServiceConfig()).run([("clean", prob)])
+    both = FleetControlService(ServiceConfig()).run(
+        [("clean", prob), ("bad", bad)])
+    co = next(r for r in both if r.cell_id == "clean")
+    if kind == "deep_fade":
+        # deep fades keep devices *healthy* (finite gains), so the
+        # cohabitant genuinely participates: tolerance, not bitwise
+        assert np.allclose(solo.solution.a, co.solution.a, atol=1e-5)
+    else:
+        assert np.array_equal(np.asarray(solo.solution.a),
+                              np.asarray(co.solution.a))
+        assert np.array_equal(np.asarray(solo.solution.power),
+                              np.asarray(co.solution.power))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       device_rate=st.floats(0.1, 0.9))
+def test_partially_faulted_cohabitant_within_tolerance(seed, device_rate):
+    prob = slice_round(make_problem("drifting_metro", seed=0,
+                                    n_devices=N, n_rounds=2), 0)
+    rng = np.random.default_rng(seed)
+    bad = corrupt_problem(prob, "nan_channel", rng=rng,
+                          device_rate=device_rate)
+    solo, = FleetControlService(ServiceConfig()).run([("clean", prob)])
+    both = FleetControlService(ServiceConfig()).run(
+        [("clean", prob), ("bad", bad)])
+    co = next(r for r in both if r.cell_id == "clean")
+    assert np.isfinite(np.asarray(co.solution.a)).all()
+    assert np.allclose(solo.solution.a, co.solution.a, atol=1e-5)
+    assert np.allclose(solo.solution.power, co.solution.power,
+                       rtol=1e-4, atol=1e-6)

@@ -1,0 +1,459 @@
+"""Fault-tolerance suite: boundary hardening, chaos harness, degraded modes.
+
+Pins the ISSUE 8 acceptance criteria:
+
+* **NaN regression** — the division guards in ``core.problem`` /
+  ``core.power``: a zero/NaN/Inf channel gain yields the
+  infeasible-device gate (``P^min = inf``), never a NaN that escapes
+  through ``solve_joint_fused``;
+* **health boundary** — ``health_mask`` / ``sanitize`` / ``validate``
+  map corrupted devices to self-deselecting no-ops (``a = 0``, zero
+  power) and are bitwise identities on healthy problems;
+* **graceful degradation** — unconverged batches retry once through the
+  reference path, repeatedly-failing buckets trip a per-bucket circuit
+  breaker that sheds (cached-or-zero) instead of hanging, and
+  ``solve_coupled`` returns best-feasible-so-far at its iteration cap;
+* **chaos harness** — seeded ``FaultPlan`` corruption replays
+  identically, composes with the open-loop driver, and never leaks a
+  non-finite solution;
+* **degraded training** — dropped uploads leave the eq.-4 aggregation
+  (survivors only) while their energy stays charged, with an all-False
+  drop table bitwise identical to the fault-free program;
+* **crash safety** — ``solve_rounds`` checkpoint/resume reproduces the
+  uninterrupted control table bitwise on a fresh service.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.alternating import solve_joint_fused
+from repro.core.batch import solve_joint_batch, stack_problems
+from repro.core.multicell import make_multicell, solve_coupled
+from repro.core.power import element_p_min
+from repro.core.problem import sample_problem
+from repro.core.scenarios import make_problem, slice_round
+from repro.fl.closed_loop import ClosedLoopConfig, run_closed_loop_grid, solve_rounds
+from repro.fl.engine import FLConfig
+from repro.fl.scan_engine import (
+    init_sweep_params,
+    plan_trajectory,
+    run_fl_sweep,
+    stack_plans,
+)
+from repro.serve import (
+    CHANNEL_KINDS,
+    FaultPlan,
+    FleetControlService,
+    ServiceConfig,
+    chaos_drive,
+    corrupt_problem,
+    corrupt_trace,
+    count_nonfinite,
+    dropout_mask,
+    make_cells,
+    poisson_trace,
+)
+
+N = 16
+
+
+def _drifting(n_devices=N, n_rounds=4, seed=0):
+    return make_problem("drifting_metro", seed=seed, n_devices=n_devices,
+                        n_rounds=n_rounds)
+
+
+def _corrupt_fading(problem, entries):
+    fad = np.array(problem.fading, np.float32)
+    for (i, k), v in entries.items():
+        fad[i, k] = v
+    return dataclasses.replace(problem, fading=jnp.asarray(fad))
+
+
+def _finite(sol):
+    return (np.isfinite(np.asarray(sol.a)).all()
+            and np.isfinite(np.asarray(sol.power)).all())
+
+
+# ------------------------------------------------------- division guards
+
+def test_p_min_zero_gain_is_infeasible_gate_not_nan():
+    # the regression this PR fixes: a = 0 with pg = 0 used to emit
+    # expm1(0)/0 = NaN; now zero/negative gain reads as P^min = inf
+    a = jnp.array([0.0, 0.5, 0.5, 0.5])
+    pg = jnp.array([0.0, 0.0, jnp.nan, 1e-3])
+    out = element_p_min(a, pg, jnp.float32(1e6), s_bits=1e4, tau=0.5)
+    assert bool(jnp.isinf(out[0])) and bool(jnp.isinf(out[1]))
+    assert bool(jnp.isinf(out[2]))          # NaN gain fails pg > 0 too
+    assert bool(jnp.isfinite(out[3]))
+
+
+@pytest.mark.parametrize("bad", [0.0, np.nan, np.inf])
+def test_fused_solver_finite_under_corrupted_gain(bad):
+    # pre-guard, a single corrupted fading entry NaN-poisoned the whole
+    # fused while-loop; post-guard every output element stays finite
+    prob = _corrupt_fading(_drifting(), {(1, 0): bad, (5, 2): bad})
+    sol = solve_joint_fused(prob, sanitize=True)
+    assert _finite(sol)
+    assert bool(sol.converged)
+
+
+def test_path_gain_zero_fading_times_inf_distance():
+    # 0 * inf in path_gain: zero fading on an (unphysical) zero-distance
+    # row must not manufacture NaN
+    prob = _drifting()
+    d = np.array(prob.distance_m, np.float64)
+    d[0] = 0.0
+    fad = np.array(prob.fading, np.float32)
+    fad[0, :] = 0.0
+    prob = dataclasses.replace(prob, distance_m=jnp.asarray(d),
+                               fading=jnp.asarray(fad))
+    assert np.isfinite(np.asarray(prob.path_gain())[0]).all()
+
+
+# --------------------------------------------------- health mask boundary
+
+def test_health_mask_flags_each_corruption():
+    prob = _drifting()
+    fad = np.array(prob.fading, np.float32)
+    fad[1, 0] = np.nan
+    fad[3, 2] = np.inf
+    fad[5, 1] = 0.0
+    prob = dataclasses.replace(prob, fading=jnp.asarray(fad))
+    health = prob.health_mask(xp=np)
+    assert health.shape == (N,)
+    # device granularity: one bad round marks the whole device
+    assert not health[1] and not health[3] and not health[5]
+    assert health.sum() == N - 3
+
+
+def test_health_mask_non_channel_leaves():
+    prob = _drifting()
+    eb = np.array(prob.energy_budget_j, np.float32)
+    eb[2] = -1.0
+    bw = np.array(prob.bandwidth_hz, np.float32)
+    bw[4] = 0.0
+    prob = dataclasses.replace(prob, energy_budget_j=jnp.asarray(eb),
+                               bandwidth_hz=jnp.asarray(bw))
+    health = prob.health_mask(xp=np)
+    assert not health[2] and not health[4] and health.sum() == N - 2
+
+
+def test_sanitize_is_bitwise_identity_on_healthy_problem():
+    prob = _drifting()
+    clean, health = prob.sanitize()
+    assert bool(np.asarray(health).all())
+    for f in ("distance_m", "bandwidth_hz", "energy_budget_j",
+              "dataset_size", "cycles_per_sample", "cpu_hz", "weights",
+              "fading"):
+        a = np.asarray(getattr(prob, f))
+        b = np.asarray(getattr(clean, f))
+        assert np.array_equal(a, b), f
+
+
+def test_sanitized_devices_self_deselect_in_solve():
+    prob = _corrupt_fading(_drifting(), {(2, 0): np.nan, (7, 1): np.inf})
+    sol = solve_joint_fused(prob, sanitize=True)
+    a = np.asarray(sol.a)
+    p = np.asarray(sol.power)
+    assert np.all(a[[2, 7]] == 0.0) and np.all(p[[2, 7]] == 0.0)
+    # healthy rows solve exactly as if the corrupted devices were
+    # replaced by padding (the NEUTRAL_FILLS idiom)
+    assert _finite(sol)
+
+
+def test_validate_names_unhealthy_devices():
+    prob = _corrupt_fading(_drifting(), {(3, 1): np.nan})
+    with pytest.raises(ValueError, match=r"\b3\b"):
+        prob.validate()
+    _drifting().validate()                  # healthy: no raise
+
+
+# -------------------------------------------------------- chaos harness
+
+@pytest.mark.parametrize("kind", CHANNEL_KINDS)
+def test_corrupt_problem_kinds_stay_finite_through_service(kind):
+    prob = slice_round(_drifting(), 0)
+    bad = corrupt_problem(prob, kind, rng=np.random.default_rng(0),
+                          device_rate=0.25)
+    svc = FleetControlService(ServiceConfig())
+    resp, = svc.run([("cell", bad)])
+    assert _finite(resp.solution)
+    if kind != "deep_fade":                 # deep fades stay *healthy*
+        assert resp.n_unhealthy > 0
+
+
+def test_corrupt_trace_is_seeded_and_composable():
+    cells = make_cells(2, n_devices=N, n_rounds=3, seed=0)
+    trace = poisson_trace(cells, rate_hz=100.0, n_requests=12, seed=1)
+    plan = FaultPlan(seed=5, fault_rate=0.5)
+    t1, n1 = corrupt_trace(trace, plan)
+    t2, n2 = corrupt_trace(trace, plan)
+    assert n1 == n2 > 0
+    for a, b in zip(t1, t2):
+        assert np.array_equal(np.asarray(a.problem.fading),
+                              np.asarray(b.problem.fading),
+                              equal_nan=True)
+    # a different seed lands on different corruption
+    t3, _ = corrupt_trace(trace, dataclasses.replace(plan, seed=6))
+    assert any(not np.array_equal(np.asarray(a.problem.fading),
+                                  np.asarray(b.problem.fading),
+                                  equal_nan=True)
+               for a, b in zip(t1, t3))
+
+
+def test_chaos_drive_no_nan_escape_and_complete():
+    cells = make_cells(2, n_devices=N, n_rounds=3, seed=0)
+    trace = poisson_trace(cells, rate_hz=200.0, n_requests=16, seed=2)
+    svc = FleetControlService(ServiceConfig(cost_smoothing=0.0))
+    plan = FaultPlan(kinds=CHANNEL_KINDS + ("cost_spike",), seed=7,
+                     fault_rate=0.4)
+    rep = chaos_drive(svc, trace, plan)
+    assert len(rep.report.responses) == len(trace)   # no hang, no loss
+    assert rep.nan_escapes == 0
+    assert rep.n_faulted > 0
+    assert rep.n_unhealthy_devices > 0
+    assert rep.counters["unhealthy_devices"] == rep.n_unhealthy_devices
+
+
+def test_fault_free_cohabitant_bitwise_unaffected():
+    # a fully-faulted problem sanitises to all-neutral rows (the padding
+    # idiom), so sharing a micro-batch with it cannot perturb the fused
+    # while-loop's trip count: the clean response is bitwise identical
+    prob = slice_round(_drifting(), 0)
+    dead = corrupt_problem(prob, "device_dropout",
+                           rng=np.random.default_rng(0), device_rate=1.0)
+    solo, = FleetControlService(ServiceConfig()).run([("clean", prob)])
+    both = FleetControlService(ServiceConfig()).run(
+        [("clean", prob), ("dead", dead)])
+    co = next(r for r in both if r.cell_id == "clean")
+    assert np.array_equal(np.asarray(solo.solution.a),
+                          np.asarray(co.solution.a))
+    assert np.array_equal(np.asarray(solo.solution.power),
+                          np.asarray(co.solution.power))
+
+
+# ------------------------------------------------- degraded-mode service
+
+def _force_unconverged(svc):
+    """Monkeypatch the fast path to report non-convergence (the retry
+    path calls ``solve_joint_batch`` directly, so it stays real)."""
+    orig = svc._solve
+    def broken(batch, init):
+        sol = orig(batch, init)
+        return sol._replace(converged=jnp.zeros_like(sol.converged))
+    svc._solve = broken
+
+
+def test_unconverged_batch_retries_through_reference_path():
+    svc = FleetControlService(ServiceConfig())
+    _force_unconverged(svc)
+    resp, = svc.run([("c", slice_round(_drifting(), 0))])
+    assert resp.retried and resp.converged
+    assert svc.stats.n_retries == 1 and svc.stats.n_unconverged == 0
+    assert _finite(resp.solution)
+
+
+def test_circuit_breaker_opens_sheds_and_recovers():
+    cfg = ServiceConfig(retry_unconverged=False, breaker_threshold=2,
+                        breaker_cooldown=2)
+    svc = FleetControlService(cfg)
+    _force_unconverged(svc)
+    prob = slice_round(_drifting(), 0)
+    svc.run([("c0", prob)])                 # streak 1
+    svc.run([("c0", prob)])                 # streak 2 -> breaker opens
+    assert svc.stats.breaker_opens == 1
+    assert svc.stats.retry_backoff_s > 0.0
+    shed, = svc.run([("c0", prob)])         # cooldown tick 1: shed
+    assert shed.shed and not shed.converged
+    # shed-from-cache: c0 solved before, so the cached table comes back
+    assert shed.warm_started
+    assert _finite(shed.solution)
+    svc.run([("c0", prob)])                 # cooldown tick 2: shed
+    assert svc.stats.n_shed == 2
+    # half-open probe: restore the real solver and watch it recover
+    svc._solve = FleetControlService.__dict__["_solve"].__get__(svc)
+    ok, = svc.run([("c0", prob)])
+    assert not ok.shed and ok.converged
+    assert svc._fail_streak[16] == 0
+
+
+def test_shed_without_cache_returns_zero_solution():
+    cfg = ServiceConfig(retry_unconverged=False)
+    svc = FleetControlService(cfg)
+    svc._breaker_open[16] = 1               # force the breaker open
+    resp, = svc.run([("never-seen", slice_round(_drifting(), 0))])
+    assert resp.shed and not resp.warm_started
+    assert np.all(np.asarray(resp.solution.a) == 0.0)
+    assert np.all(np.asarray(resp.solution.power) == 0.0)
+
+
+def test_counter_summary_carries_fault_counters():
+    svc = FleetControlService(ServiceConfig())
+    c = svc.stats.counter_summary()
+    for key in ("unconverged", "retries", "shed", "unhealthy_devices",
+                "breaker_opens", "metro_caps"):
+        assert c[key] == 0
+    s = svc.stats.summary()
+    assert s["retry_backoff_s"] == 0.0
+
+
+def test_response_surfaces_convergence_and_iters():
+    svc = FleetControlService(ServiceConfig())
+    resp, = svc.run([("c", slice_round(_drifting(), 0))])
+    assert resp.converged is True
+    assert resp.n_iters >= 1
+    assert resp.n_iters == int(np.asarray(resp.solution.n_iters))
+
+
+# ------------------------------------------------------ coupled degraded
+
+def test_make_multicell_rejects_nonfinite_coupling():
+    cells = [sample_problem(7_001 * c, 8) for c in range(2)]
+    g = np.zeros((2, 2))
+    g[0, 1] = np.inf
+    with pytest.raises(ValueError, match="finite"):
+        make_multicell(cells, g)
+
+
+def test_solve_coupled_cap_returns_best_feasible_so_far():
+    mc = make_problem("interference_grid", seed=0, n_cells=4, n_devices=12)
+    capped = solve_coupled(mc, outer_iters=1)
+    full = solve_coupled(mc, outer_iters=40)
+    assert bool(full.converged) and not full.hit_iter_cap
+    if not bool(capped.converged):
+        assert capped.hit_iter_cap
+    assert np.isfinite(np.asarray(capped.batch.a)).all()
+    assert np.isfinite(np.asarray(capped.batch.power)).all()
+
+
+def test_solve_coupled_sanitize_degrades_corrupted_cell():
+    cells = [sample_problem(7_001 * c, 8) for c in range(2)]
+    d = np.array(cells[0].distance_m, np.float64)
+    d[3] = np.nan
+    cells[0] = dataclasses.replace(cells[0], distance_m=jnp.asarray(d))
+    mc = make_multicell(cells, np.zeros((2, 2)))
+    sol = solve_coupled(mc, sanitize=True)
+    a = np.asarray(sol.batch.a)
+    assert np.isfinite(a).all()
+    assert np.all(a[0, 3] == 0.0)
+
+
+# -------------------------------------------------- degraded aggregation
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_mnist_like
+    prob = make_problem("paper_static", seed=0, n_devices=8)
+    train, test = make_mnist_like(256, 64, seed=0)
+    parts = dirichlet_partition(train, 8, 0.3, seed=1)
+    cfg = FLConfig(n_rounds=6, eval_every=3, seed=0)
+    return prob, train, test, parts, cfg
+
+
+def _run_one(plan, train, test, cfg):
+    plans = jax.tree_util.tree_map(lambda x: x[None], plan)
+    return run_fl_sweep(plans, train, test, cfg, init_sweep_params([cfg]),
+                        shard=False)
+
+
+def test_all_false_drop_table_bitwise_identical(fl_setup):
+    from repro.core.schedulers import ProbabilisticScheduler
+    prob, train, test, parts, cfg = fl_setup
+    sch = ProbabilisticScheduler()
+    clean = _run_one(plan_trajectory(prob, sch, parts, cfg),
+                     train, test, cfg)
+    zeros = _run_one(plan_trajectory(prob, sch, parts, cfg,
+                                     drops=np.zeros((6, 8), bool)),
+                     train, test, cfg)
+    h0, hz = clean.histories[0], zeros.histories[0]
+    assert np.array_equal(h0.eval_acc, hz.eval_acc)
+    assert np.array_equal(h0.participants, hz.participants)
+    for a, b in zip(jax.tree_util.tree_leaves(clean.params),
+                    jax.tree_util.tree_leaves(zeros.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_drops_cut_survivors_but_energy_stays_charged(fl_setup):
+    from repro.core.schedulers import ProbabilisticScheduler
+    prob, train, test, parts, cfg = fl_setup
+    sch = ProbabilisticScheduler()
+    clean = _run_one(plan_trajectory(prob, sch, parts, cfg),
+                     train, test, cfg)
+    heavy = _run_one(plan_trajectory(prob, sch, parts, cfg,
+                                     drops=dropout_mask(3, 6, 8, 0.6)),
+                     train, test, cfg)
+    h0, hd = clean.histories[0], heavy.histories[0]
+    # same attempted participation stream -> identical accounting, but
+    # only surviving uploads count as participants / enter eq. 4
+    assert hd.participants.sum() < h0.participants.sum()
+    assert np.array_equal(hd.energy, h0.energy)
+    assert np.array_equal(hd.sim_time, h0.sim_time)
+
+
+def test_stack_plans_rejects_mixed_drop_tables(fl_setup):
+    from repro.core.schedulers import ProbabilisticScheduler
+    prob, train, test, parts, cfg = fl_setup
+    sch = ProbabilisticScheduler()
+    p1 = plan_trajectory(prob, sch, parts, cfg)
+    p2 = plan_trajectory(prob, sch, parts, cfg,
+                         drops=np.zeros((6, 8), bool))
+    with pytest.raises(ValueError, match="drop"):
+        stack_plans([p1, p2])
+
+
+# ----------------------------------------------------- crash-safe resume
+
+def test_solve_rounds_checkpoint_resume_bitwise(tmp_path):
+    prob = _drifting(n_rounds=6)
+    ref = solve_rounds(prob, FleetControlService(ServiceConfig()))
+
+    # crash after 3 rounds
+    svc = FleetControlService(ServiceConfig())
+    orig_run, calls = svc.run, [0]
+    def crashy(reqs=None):
+        if calls[0] >= 3:
+            raise RuntimeError("simulated crash")
+        calls[0] += 1
+        return orig_run(reqs)
+    svc.run = crashy
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        solve_rounds(prob, svc, checkpoint_dir=tmp_path)
+
+    # resume on a FRESH service: bitwise-identical control table,
+    # identical warm accounting — as if never killed
+    res = solve_rounds(prob, FleetControlService(ServiceConfig()),
+                       checkpoint_dir=tmp_path)
+    assert np.array_equal(ref.a, res.a)
+    assert np.array_equal(ref.power, res.power)
+    assert ref.warm_rounds == res.warm_rounds
+    assert ref.inner_iters == res.inner_iters
+    assert ref.outer_iters == res.outer_iters
+
+
+def test_resume_with_completed_checkpoint_skips_all_solves(tmp_path):
+    prob = _drifting(n_rounds=4)
+    first = solve_rounds(prob, FleetControlService(ServiceConfig()),
+                         checkpoint_dir=tmp_path)
+    svc = FleetControlService(ServiceConfig())
+    again = solve_rounds(prob, svc, checkpoint_dir=tmp_path)
+    assert np.array_equal(first.a, again.a)
+    assert svc.stats.n_solved == 0          # everything restored
+
+
+@pytest.mark.slow
+def test_faulted_closed_loop_grid_finite_and_degraded(tmp_path):
+    plan = FaultPlan(seed=3, device_rate=0.25, drop_rate=0.3)
+    cfg = ClosedLoopConfig(n_devices=8, n_rounds=6, n_train=256, n_test=64,
+                           eval_every=3, fault_plan=plan,
+                           checkpoint_dir=str(tmp_path))
+    out = run_closed_loop_grid(cfg, strategies=("probabilistic", "uniform"),
+                               shard=False)
+    assert out["faults"]["n_unhealthy_devices"] > 0
+    for name, row in out["strategies"].items():
+        assert all(np.isfinite(v) for v in row.values()), (name, row)
+    # the service sanitised every corrupted submission
+    assert out["control"]["service"]["unhealthy_devices"] > 0
