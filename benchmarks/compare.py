@@ -52,6 +52,7 @@ TRACKED_PREFIXES = (
     "fleet_service_",
     "multicell_",
     "closed_loop_",
+    "bit_allocation_",
     "solver_",
     "dinkelbach",
     "analytic_power",
@@ -118,6 +119,11 @@ DERIVED_BOUNDS: dict[str, dict[str, tuple[float | None, float | None]]] = {
     # and no corruption may ever echo into a response (nan_escapes == 0)
     "fleet_service_faulted_chaos": {"degraded_throughput_ratio": (0.5, None),
                                     "nan_escapes": (None, 0.0)},
+    # joint bit allocation on the bandwidth-starved scenario: the {8,16,32}
+    # menu must keep buying participation over fixed fp32 (deterministic:
+    # same scenario seed => same solve; measured 4.0x, floor leaves room
+    # for solver-tolerance drift)
+    "bit_allocation_participation": {"participants_ratio": (1.5, None)},
 }
 
 

@@ -645,14 +645,79 @@ def bench_closed_loop_throughput(full: bool):
     emit("closed_loop_cold_inner_iters", ci,
          f"speedup={ci / max(wi, 1e-9):.1f}x")
 
-    # end-to-end: control plane + full strategy suite + scan-fused training
-    n_strat = len(CLOSED_LOOP_STRATEGIES)
+    # end-to-end: control plane + classic strategy suite + scan-fused
+    # training.  Pinned to the pre-compression five strategies so the
+    # committed baseline stays comparable; the quantized joint_bits
+    # strategy is benched separately (bench_bit_allocation).
+    classic = tuple(s for s in CLOSED_LOOP_STRATEGIES if s != "joint_bits")
+    n_strat = len(classic)
     cfg = ClosedLoopConfig(n_devices=16, n_rounds=6, n_train=512,
                            n_test=128, eval_every=3)
-    us_pipe = _timeit(lambda: run_closed_loop_grid(cfg), n=3, warmup=1)
+    us_pipe = _timeit(lambda: run_closed_loop_grid(cfg, classic),
+                      n=3, warmup=1)
     emit("closed_loop_pipeline", us_pipe,
          f"strategies={n_strat} rounds={cfg.n_rounds} "
          f"trajectories_per_sec={n_strat / (us_pipe / 1e6):.2f}")
+
+
+# -------------------------------------------------------- bit allocation
+
+def bench_bit_allocation(full: bool):
+    """Joint bit/power/selection (docs/compression.md): participation and
+    per-participant energy vs fixed fp32 on the bandwidth-starved
+    scenario, plus the quantized masked-aggregate kernel vs its jnp
+    oracle.  ``participants_ratio`` is deterministic (same scenario seed
+    => same solve) and gated machine-independently in compare.py."""
+    import dataclasses as _dc
+
+    from repro.core import make_problem, solve_joint_fused
+    from repro.kernels.masked_aggregate.ops import quantized_masked_aggregate
+    from repro.kernels.masked_aggregate.ref import (
+        quantized_masked_aggregate_ref)
+
+    n_dev = 64 if full else 32
+    menu = (8, 16, 32)
+    prob = make_problem("bandwidth_starved", seed=1, n_devices=n_dev)
+
+    sol32 = solve_joint_fused(prob)
+    solm = solve_joint_fused(prob, bit_menu=menu)
+    us32 = _timeit(lambda: solve_joint_fused(prob), n=5, warmup=1)
+    usm = _timeit(lambda: solve_joint_fused(prob, bit_menu=menu),
+                  n=5, warmup=1)
+
+    def per_round(sol, p):
+        a = np.asarray(sol.a)
+        e_dev = np.asarray(p.upload_energy(sol.power)
+                           + p.compute_energy())
+        return float(a.sum()), float((a * e_dev).sum())
+
+    parts32, energy32 = per_round(sol32, prob)
+    prob_b = _dc.replace(prob, bits=solm.bits)
+    parts_m, energy_m = per_round(solm, prob_b)
+    epp32 = energy32 / max(parts32, 1e-12)
+    epp_m = energy_m / max(parts_m, 1e-12)
+    emit(f"bit_allocation_solve_fp32_n{n_dev}", us32,
+         f"expected_participants={parts32:.2f}")
+    emit("bit_allocation_participation", usm,
+         f"participants_ratio={parts_m / max(parts32, 1e-12):.2f} "
+         f"energy_per_participant_ratio={epp_m / max(epp32, 1e-12):.2f} "
+         f"menu={'/'.join(str(b) for b in menu)} N={n_dev}")
+
+    rng = np.random.default_rng(0)
+    n, d = (256, 131_072) if full else (128, 16_384)
+    g = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    coef = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    noise = jnp.asarray(rng.uniform(0, 1, (n, d)), jnp.float32)
+    bits = jnp.asarray(rng.choice([4.0, 8.0, 16.0, 32.0], n), jnp.float32)
+    ref = jax.jit(quantized_masked_aggregate_ref)
+    us_ref = _timeit(ref, g, coef, noise, bits, n=10)
+    err = float(jnp.max(jnp.abs(
+        quantized_masked_aggregate(g, coef, noise, bits, interpret=True)
+        - ref(g, coef, noise, bits))))
+    emit("bit_allocation_quantized_aggregate_ref_xla", us_ref,
+         f"N={n} D={d}")
+    emit("bit_allocation_kernel_check", 0.0,
+         f"interpret_max_err={err:.2e}")
 
 
 # ------------------------------------------------------------- roofline
@@ -688,6 +753,7 @@ BENCHES = {
     "fleet_service_faulted": bench_fleet_service_faulted,
     "multicell_solver": bench_multicell_solver,
     "closed_loop_throughput": bench_closed_loop_throughput,
+    "bit_allocation": bench_bit_allocation,
     "roofline": bench_roofline,
 }
 

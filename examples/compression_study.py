@@ -14,13 +14,16 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import ProbabilisticScheduler, sample_problem
+from repro.core import (GRAD_SIZE_BITS_FP32, ProbabilisticScheduler,
+                        sample_problem)
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_mnist_like
 from repro.fl.engine import FLConfig, run_fl
 
 BITS = [32, 8, 4]
-BASE_S = 199_213 * 32.0
+# the fp32 payload every sampled problem carries (core.problem's default);
+# an earlier copy of this constant had drifted to 199_213 params
+BASE_S = GRAD_SIZE_BITS_FP32
 
 
 def main():

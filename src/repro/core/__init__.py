@@ -7,6 +7,7 @@ from repro.core.alternating import (
     fused_fixed_point,
     fused_fixed_point_flat,
     problem_elements,
+    select_best_bits,
     solve_joint,
     solve_joint_fused,
     solve_joint_trace,
@@ -32,7 +33,8 @@ from repro.core.multicell import (
 )
 from repro.core.optimal import solve_joint_optimal
 from repro.core.power import PowerSolution, analytic_power, dinkelbach_power, energy_bound_ok
-from repro.core.problem import WirelessFLProblem, sample_problem
+from repro.core.problem import (GRAD_SIZE_BITS_FP32, WirelessFLProblem,
+                                sample_problem)
 from repro.core.schedulers import (
     SCHEDULERS,
     DeterministicScheduler,
@@ -57,7 +59,8 @@ from repro.core.scenarios import (
 from repro.core.selection import optimal_selection
 
 __all__ = [
-    "WirelessFLProblem", "sample_problem",
+    "WirelessFLProblem", "sample_problem", "GRAD_SIZE_BITS_FP32",
+    "select_best_bits",
     "ProblemBatch", "BatchSolution", "stack_problems", "shard_batch",
     "solve_joint_batch", "batch_elements", "pad_batch", "WarmStart",
     "Scenario", "SCENARIOS", "make_problem", "make_batch", "make_mixed_batch",

@@ -117,6 +117,10 @@ class JointSolution(NamedTuple):
     # outer steps; 0 for the closed-form analytic mode.  The figure warm
     # starts collapse — see the module docstring.
     inner_iters: jax.Array | int = 0
+    # per-element uplink bit widths chosen by the bit-allocation step —
+    # only set when solving with a ``bit_menu`` (docs/compression.md);
+    # None otherwise.
+    bits: Optional[jax.Array] = None
 
     @property
     def resume(self) -> WarmStart:
@@ -193,7 +197,7 @@ def _warm_solver(problem: WirelessFLProblem, power_solver: str,
     pg = problem._pg(a0)
     bw = problem.bandwidth_hz if a0.ndim == 1 else problem.bandwidth_hz[:, None]
     lam0 = element_warm_lambda(a0, p0, pg, bw,
-                               s_bits=problem.grad_size_bits)
+                               s_bits=problem.payload_bits(a0.ndim))
     return functools.partial(dinkelbach_power, lam0=lam0)
 
 
@@ -292,6 +296,10 @@ class FleetElements(NamedTuple):
     bw: jax.Array      # bandwidth B_i
     emax: jax.Array    # per-round energy budget E^max_i
     ec: jax.Array      # computation energy E^c_i
+    # effective uplink payload S_i = S b_i / 32 in bits (already scaled);
+    # None => every element uses the solver's static ``s_bits`` payload —
+    # the byte-identity idiom of the problem's optional leaves.
+    sbits: Optional[jax.Array] = None
 
 
 # padding for chunk/shard alignment: zero energy budget self-deselects
@@ -319,7 +327,9 @@ def problem_elements(problem: WirelessFLProblem,
     return FleetElements(pg=b(problem.path_gain()),
                          bw=b(problem.bandwidth_hz),
                          emax=b(problem.energy_budget_j),
-                         ec=b(problem.compute_energy()))
+                         ec=b(problem.compute_energy()),
+                         sbits=None if problem.bits is None
+                         else b(problem.payload_bits(len(shape))))
 
 
 def _fused_step(a: jax.Array, el: FleetElements, *, s_bits: float,
@@ -338,6 +348,8 @@ def _fused_step(a: jax.Array, el: FleetElements, *, s_bits: float,
     Returns ``(a_new, power, inner_iters)``; ``inner_iters`` is 0 in
     analytic mode.
     """
+    if el.sbits is not None:
+        s_bits = el.sbits        # per-element bit-scaled payload
     if power_solver == "analytic":
         p, lam, feasible = analytic_power_elements(
             a, el.pg, el.bw, s_bits=s_bits, tau=tau, p_max=p_max)
@@ -361,6 +373,8 @@ def fused_init(el: FleetElements, *, s_bits: float, tau: float,
     """Feasible (a^0, P^0) on raw elements: transmit at P^max, a^0 from
     eq. (13) — the element form of ``_init_state``.  Shared with the
     Pallas kernel so the two paths cannot drift."""
+    if el.sbits is not None:
+        s_bits = el.sbits
     p0 = jnp.full(el.pg.shape, p_max)
     t0 = element_tx_time(p0, el.pg, el.bw, s_bits=s_bits)
     a0 = selection_update_elements(p0, t0, el.emax, el.ec, tau=tau,
@@ -369,11 +383,60 @@ def fused_init(el: FleetElements, *, s_bits: float, tau: float,
     return a0, p0
 
 
+def _menu_payloads(el: FleetElements, *, s_bits: float, bit_menu):
+    """Candidate effective payloads for each menu entry, descending width.
+
+    Entry ``b`` maps to ``S b / 32``; a problem-level ``bits`` cap
+    (``el.sbits``) composes by elementwise minimum — the device can never
+    transmit more precision than its own leaf allows.  Descending order is
+    load-bearing: ``jnp.argmax`` returns the *first* maximum, so exact
+    ties in the candidate objective resolve to the largest bit width
+    (devices with slack keep full precision; see docs/compression.md).
+    """
+    menu = tuple(sorted({float(b) for b in bit_menu}, reverse=True))
+    if not menu or menu[0] > 32.0 or menu[-1] <= 0.0:
+        raise ValueError(f"bit_menu entries must lie in (0, 32], got {bit_menu!r}")
+    payloads = []
+    for b in menu:
+        s_b = s_bits * (b / 32.0)
+        if el.sbits is not None:
+            s_b = jnp.minimum(el.sbits, s_b)
+        payloads.append(s_b)
+    return menu, payloads
+
+
+def select_best_bits(a_m: jax.Array, p_m: jax.Array, sbits_m: jax.Array,
+                     *, s_bits: float, atol: float = 1e-6
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Closed-form bit-allocation: argmax over per-element candidates.
+
+    ``a_m``/``p_m``/``sbits_m`` stack one converged candidate solution per
+    menu entry along a leading axis, **ordered by descending bit width**.
+    Per element the chosen entry is the first (widest) whose selection
+    probability is within ``atol`` of the best — participation is the
+    paper objective (7a), so any real gain justifies dropping bits, while
+    near-ties (a = 1 capped, deselected a = 0, upload energy negligible
+    against E^c) resolve to full precision rather than to float noise.
+
+    Returns ``(a, power, bits)`` with ``bits = 32 * sbits / S``, the
+    effective chosen width.  This is the step the golden N=3 oracle in
+    ``tests/test_bit_allocation.py`` pins.
+    """
+    amax = jnp.max(a_m, axis=0)
+    idx = jnp.argmax(a_m >= amax[None] - atol, axis=0)[None]
+
+    def take(x):
+        return jnp.take_along_axis(x, idx, axis=0)[0]
+
+    return take(a_m), take(p_m), take(sbits_m) * (32.0 / s_bits)
+
+
 def fused_fixed_point(el: FleetElements, *, s_bits: float, tau: float,
                       p_max: float, eps: float = 1e-7, max_iters: int = 50,
                       power_solver: str = "analytic",
                       faithful_eq13_typo: bool = False,
-                      init: Optional[tuple[jax.Array, jax.Array]] = None
+                      init: Optional[tuple[jax.Array, jax.Array]] = None,
+                      bit_menu: Optional[tuple] = None
                       ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                                  jax.Array]:
     """The flat convergence-masked alternating solve.
@@ -395,17 +458,55 @@ def fused_fixed_point(el: FleetElements, *, s_bits: float, tau: float,
     Returns ``(a, power, n_iters, converged, inner_iters)`` with
     ``converged`` a per-element bool and ``inner_iters`` the summed inner
     power-solver iterations (0 in analytic mode).
+
+    ``bit_menu`` (a tuple of widths in (0, 32], e.g. ``(4, 6, 8, 16, 32)``)
+    enables the joint bit/power/selection solve and extends the return
+    value to the 6-tuple ``(a, power, n_iters, converged, inner_iters,
+    bits)``.  The menu is evaluated *vectorized inside the same
+    convergence-masked single-level while loop*: the element set is
+    expanded with a leading candidate axis (one slice per menu width,
+    descending), every candidate's alternation runs to its own fixed
+    point in the one ``lax.while_loop``, and :func:`select_best_bits`
+    reduces the axis per element (argmax of the converged selection
+    probability, exact-tie towards full precision).  This is exact for
+    the separable per-element problem — comparing candidates only after
+    one step from a shared iterate would always tie, because the eq.-13
+    time term at P = P^min(a) equals ``a`` for *every* payload.  The
+    ``None`` default keeps the historical 5-tuple and traces the exact
+    pre-menu program.
     """
+    if bit_menu is not None:
+        _, payloads = _menu_payloads(el, s_bits=s_bits, bit_menu=bit_menu)
+        m, shape = len(payloads), el.pg.shape
+
+        def expand(x):
+            return jnp.broadcast_to(x[None], (m,) + shape)
+
+        sb = jnp.stack([jnp.broadcast_to(
+            jnp.asarray(s_b, jnp.float32), shape) for s_b in payloads])
+        el_m = FleetElements(pg=expand(el.pg), bw=expand(el.bw),
+                             emax=expand(el.emax), ec=expand(el.ec),
+                             sbits=sb)
+        init_m = None if init is None else tuple(expand(x) for x in init)
+        a_m, p_m, iters, conv_m, inner = fused_fixed_point(
+            el_m, s_bits=s_bits, tau=tau, p_max=p_max, eps=eps,
+            max_iters=max_iters, power_solver=power_solver,
+            faithful_eq13_typo=faithful_eq13_typo, init=init_m)
+        a, p, bits = select_best_bits(a_m, p_m, sb, s_bits=s_bits)
+        return a, p, iters, jnp.all(conv_m, axis=0), inner, bits
+
     lam0 = 1e-3
     if init is not None and power_solver == "dinkelbach":
         lam0 = element_warm_lambda(init[0], init[1], el.pg, el.bw,
-                                   s_bits=s_bits)
+                                   s_bits=s_bits if el.sbits is None
+                                   else el.sbits)
+    a0, _ = fused_init(el, s_bits=s_bits, tau=tau, p_max=p_max,
+                       faithful_eq13_typo=faithful_eq13_typo)
+
     step = functools.partial(_fused_step, el=el, s_bits=s_bits, tau=tau,
                              p_max=p_max, power_solver=power_solver,
                              faithful_eq13_typo=faithful_eq13_typo,
                              lam0=lam0)
-    a0, _ = fused_init(el, s_bits=s_bits, tau=tau, p_max=p_max,
-                       faithful_eq13_typo=faithful_eq13_typo)
 
     def cond(state):
         _, _, delta, it, _ = state
@@ -444,9 +545,13 @@ def _pad_flat(x: jax.Array, multiple: int, fill: float) -> jax.Array:
 
 
 def _pad_elements(el: FleetElements, multiple: int) -> FleetElements:
-    return FleetElements(**{
-        f: _pad_flat(getattr(el, f), multiple, _ELEMENT_PAD[f])
-        for f in _ELEMENT_PAD})
+    padded = {f: _pad_flat(getattr(el, f), multiple, _ELEMENT_PAD[f])
+              for f in _ELEMENT_PAD}
+    if el.sbits is not None:
+        # any positive payload works: padded slots self-deselect via
+        # emax = 0, the fill only needs to keep the closed forms finite
+        padded["sbits"] = _pad_flat(el.sbits, multiple, 1.0)
+    return FleetElements(**padded)
 
 
 def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
@@ -457,7 +562,8 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
                            chunk_elements: Optional[int] = None,
                            mesh: Optional[jax.sharding.Mesh] = None,
                            shard: bool = True,
-                           init: Optional[tuple[jax.Array, jax.Array]] = None
+                           init: Optional[tuple[jax.Array, jax.Array]] = None,
+                           bit_menu: Optional[tuple] = None
                            ) -> tuple[jax.Array, jax.Array, jax.Array,
                                       jax.Array, jax.Array]:
     """Chunked, device-sharded driver over a flat ``[E]`` element set.
@@ -484,6 +590,10 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
     (padded/chunked/sharded alongside the elements); on the chunked path
     ``inner_iters`` sums over chunks (total inner work) while ``n_iters``
     is the max.
+
+    ``bit_menu`` forwards to :func:`fused_fixed_point` and, when set,
+    extends the return value with a trailing flat ``bits`` array (the
+    6-tuple contract described there).
     """
     assert el.pg.ndim == 1, "fused_fixed_point_flat takes flat [E] elements"
     e = el.pg.shape[0]
@@ -494,7 +604,7 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
                                  p_max=p_max, eps=eps, max_iters=max_iters,
                                  power_solver=power_solver,
                                  faithful_eq13_typo=faithful_eq13_typo,
-                                 init=init_c)
+                                 init=init_c, bit_menu=bit_menu)
 
     if mesh is not None:
         shard = True                       # an explicit mesh always shards
@@ -525,8 +635,12 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
         operand = constrain(pad(n_shards),
                             jax.sharding.PartitionSpec(mesh.axis_names[0])
                             if mesh else None)
-        a, p, iters, conv, inner = solve(operand)
-        return a[:e], p[:e], iters, conv[:e], inner
+        out = solve(operand)
+        if bit_menu is None:
+            a, p, iters, conv, inner = out
+            return a[:e], p[:e], iters, conv[:e], inner
+        a, p, iters, conv, inner, bits = out
+        return a[:e], p[:e], iters, conv[:e], inner, bits[:e]
 
     chunk = -(-chunk_elements // n_shards) * n_shards
     operand = pad(chunk)
@@ -536,12 +650,18 @@ def fused_fixed_point_flat(el: FleetElements, *, s_bits: float, tau: float,
     operand = constrain(operand,
                         jax.sharding.PartitionSpec(None, mesh.axis_names[0])
                         if mesh else None)
-    a, p, iters, conv, inner = jax.lax.map(solve, operand)
+    out = jax.lax.map(solve, operand)
 
     def unflat(x):
         return x.reshape(-1)[:e]
 
-    return unflat(a), unflat(p), jnp.max(iters), unflat(conv), jnp.sum(inner)
+    if bit_menu is None:
+        a, p, iters, conv, inner = out
+        return (unflat(a), unflat(p), jnp.max(iters), unflat(conv),
+                jnp.sum(inner))
+    a, p, iters, conv, inner, bits = out
+    return (unflat(a), unflat(p), jnp.max(iters), unflat(conv),
+            jnp.sum(inner), unflat(bits))
 
 
 def solve_joint_fused(problem: WirelessFLProblem,
@@ -555,7 +675,8 @@ def solve_joint_fused(problem: WirelessFLProblem,
                       mesh: Optional[jax.sharding.Mesh] = None,
                       shard: bool = False,
                       sanitize: bool = False,
-                      init: Optional[tuple[jax.Array, jax.Array]] = None
+                      init: Optional[tuple[jax.Array, jax.Array]] = None,
+                      bit_menu: Optional[tuple] = None
                       ) -> JointSolution:
     """Fused single-level Algorithm 2 for one problem (jit-compatible).
 
@@ -581,6 +702,13 @@ def solve_joint_fused(problem: WirelessFLProblem,
     ``solve_joint``'s global-objective rule stops a couple of sweeps
     above it; the <= 1e-5 agreement guarantee covers the corrected
     formula only.
+
+    ``bit_menu`` (e.g. ``(4, 6, 8, 16, 32)``) enables the joint
+    bit/power/selection alternation: each sweep additionally picks, per
+    element, the menu width maximising the eq.-13 update (ties towards
+    full precision), and the returned ``JointSolution.bits`` carries the
+    chosen widths.  ``None`` (the default) traces the exact historical
+    program — byte-identical solutions, ``bits=None``.
     """
     if sanitize:
         problem, _ = problem.sanitize()
@@ -594,16 +722,27 @@ def solve_joint_fused(problem: WirelessFLProblem,
     kw = dict(s_bits=problem.grad_size_bits, tau=problem.tau_th,
               p_max=problem.p_max, eps=eps, max_iters=max_iters,
               power_solver=power_solver,
-              faithful_eq13_typo=faithful_eq13_typo, init=init)
+              faithful_eq13_typo=faithful_eq13_typo, init=init,
+              bit_menu=bit_menu)
+    bits = None
     if chunk_elements is None and not shard and mesh is None:
-        a, p, iters, conv, inner = fused_fixed_point(el, **kw)
+        out = fused_fixed_point(el, **kw)
+        if bit_menu is None:
+            a, p, iters, conv, inner = out
+        else:
+            a, p, iters, conv, inner, bits = out
     else:
         kw["init"] = None if init is None else tuple(
             x.reshape(-1) for x in init)
         flat = jax.tree_util.tree_map(lambda x: x.reshape(-1), el)
-        a, p, iters, conv, inner = fused_fixed_point_flat(
+        out = fused_fixed_point_flat(
             flat, chunk_elements=chunk_elements, mesh=mesh, shard=shard, **kw)
+        if bit_menu is None:
+            a, p, iters, conv, inner = out
+        else:
+            a, p, iters, conv, inner, bits = out
+            bits = bits.reshape(shape)
         a, p, conv = a.reshape(shape), p.reshape(shape), conv.reshape(shape)
     return JointSolution(a=a, power=p, objective=problem.objective(a),
                          n_iters=iters, converged=jnp.all(conv),
-                         inner_iters=inner)
+                         inner_iters=inner, bits=bits)

@@ -73,6 +73,9 @@ class BatchSolution(NamedTuple):
     # summed inner power-solver iterations ([B] or scalar; 0 for the
     # closed-form analytic modes) — what warm starts collapse
     inner_iters: jax.Array | int = 0
+    # chosen uplink bit widths (method="fused" with a bit_menu); None
+    # otherwise — mirrors JointSolution.bits
+    bits: Optional[jax.Array] = None
 
     def instance(self, b: int) -> JointSolution:
         """Per-instance JointSolution with padding stripped."""
@@ -83,7 +86,9 @@ class BatchSolution(NamedTuple):
                              if jnp.ndim(self.n_iters) else self.n_iters,
                              converged=self.converged[b],
                              inner_iters=jnp.asarray(self.inner_iters)[b]
-                             if jnp.ndim(self.inner_iters) else self.inner_iters)
+                             if jnp.ndim(self.inner_iters) else self.inner_iters,
+                             bits=None if self.bits is None
+                             else self.bits[b, :n])
 
     @property
     def resume(self) -> WarmStart:
@@ -125,7 +130,7 @@ class ProblemBatch:
                 v = getattr(self.problem, f.name)
                 if f.name in _PAD_VALUES:
                     v = v[b, :n]
-                elif f.name in ("fading", "interference"):
+                elif f.name in ("fading", "interference", "bits"):
                     v = None if v is None else v[b, :n]
                 kw[f.name] = v
             out.append(WirelessFLProblem(**kw))
@@ -181,6 +186,15 @@ def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
     if n_interf and len({p.interference.ndim for p in problems}) > 1:
         raise ValueError("interference rank ([N] vs [N, K]) must be uniform "
                          "across the batch")
+    n_bits = sum(p.bits is not None for p in problems)
+    if 0 < n_bits < len(problems):
+        raise ValueError(
+            f"{n_bits}/{len(problems)} instances carry a bits leaf; bits "
+            "must be all-or-none per batch (give full-precision instances "
+            "explicit bits=32 to mix them in)")
+    if n_bits and len({p.bits.ndim for p in problems}) > 1:
+        raise ValueError("bits rank ([N] vs [N, K]) must be uniform "
+                         "across the batch")
 
     stacked: dict[str, jax.Array] = {}
     for name, fill in _PAD_VALUES.items():
@@ -194,12 +208,17 @@ def stack_problems(problems: Sequence[WirelessFLProblem]) -> ProblemBatch:
     if n_interf:
         interference = jnp.asarray(np.stack(
             [_pad_tail(p.interference, n_max, 0.0) for p in problems]))
+    bits = None
+    if n_bits:
+        bits = jnp.asarray(np.stack(
+            [_pad_tail(p.bits, n_max, 32.0) for p in problems]))
 
     sizes = np.array([p.n_devices for p in problems], np.int32)
     mask = jnp.asarray(np.arange(n_max)[None, :] < sizes[:, None])
     prob = WirelessFLProblem(
         fading=fading,
         interference=interference,
+        bits=bits,
         **stacked,
         **{f: getattr(ref, f) for f in _STATIC_FIELDS},
     )
@@ -239,6 +258,9 @@ def pad_batch(batch: ProblemBatch, *, batch_size: Optional[int] = None,
         elif f.name == "interference" and v is not None:
             pad = [(0, db), (0, dn)] + [(0, 0)] * (np.ndim(v) - 2)
             v = jnp.asarray(np.pad(np.asarray(v), pad, constant_values=0.0))
+        elif f.name == "bits" and v is not None:
+            pad = [(0, db), (0, dn)] + [(0, 0)] * (np.ndim(v) - 2)
+            v = jnp.asarray(np.pad(np.asarray(v), pad, constant_values=32.0))
         kw[f.name] = v
     mask = jnp.asarray(np.pad(np.asarray(batch.mask), [(0, db), (0, dn)],
                               constant_values=False))
@@ -288,7 +310,9 @@ def _mask_solution(sol: JointSolution, mask: jax.Array) -> BatchSolution:
                          power=jnp.where(m, sol.power, 0.0),
                          objective=sol.objective, n_iters=sol.n_iters,
                          converged=sol.converged, mask=mask,
-                         inner_iters=sol.inner_iters)
+                         inner_iters=sol.inner_iters,
+                         bits=None if sol.bits is None
+                         else jnp.where(m, sol.bits, 32.0))
 
 
 @partial(jax.jit, static_argnames=("method", "power_solver",
@@ -324,18 +348,21 @@ def batch_elements(batch: ProblemBatch) -> FleetElements:
 
     return FleetElements(pg=pg, bw=b(problem.bandwidth_hz),
                          emax=b(problem.energy_budget_j),
-                         ec=b(jax.vmap(WirelessFLProblem.compute_energy)(problem)))
+                         ec=b(jax.vmap(WirelessFLProblem.compute_energy)(problem)),
+                         sbits=None if problem.bits is None
+                         else b(problem.grad_size_bits * problem.bits / 32.0))
 
 
 @partial(jax.jit, static_argnames=("power_solver", "faithful_eq13_typo",
                                    "max_iters", "chunk_elements", "mesh",
-                                   "shard"))
+                                   "shard", "bit_menu"))
 def _solve_batch_fused(batch: ProblemBatch, power_solver: str,
                        faithful_eq13_typo: bool, eps: float, max_iters: int,
                        chunk_elements: Optional[int],
                        mesh: Optional[jax.sharding.Mesh],
                        shard: bool,
-                       init: Optional[WarmStart]) -> BatchSolution:
+                       init: Optional[WarmStart],
+                       bit_menu: Optional[tuple] = None) -> BatchSolution:
     """The fused flat path: one convergence-masked iteration over the whole
     [B * N_max (* K)] element set — no per-instance lockstep, optionally
     chunked (fixed memory) and sharded along the *element* axis (a single
@@ -348,12 +375,18 @@ def _solve_batch_fused(batch: ProblemBatch, power_solver: str,
         flat_init = tuple(
             jnp.broadcast_to(jnp.asarray(x, jnp.float32),
                              shape).reshape(-1) for x in init)
-    a, p, iters, conv, inner = fused_fixed_point_flat(
+    out = fused_fixed_point_flat(
         flat, s_bits=batch.problem.grad_size_bits, tau=batch.problem.tau_th,
         p_max=batch.problem.p_max, eps=eps, max_iters=max_iters,
         power_solver=power_solver, faithful_eq13_typo=faithful_eq13_typo,
         chunk_elements=chunk_elements, mesh=mesh, shard=shard,
-        init=flat_init)
+        init=flat_init, bit_menu=bit_menu)
+    bits = None
+    if bit_menu is None:
+        a, p, iters, conv, inner = out
+    else:
+        a, p, iters, conv, inner, bits = out
+        bits = bits.reshape(shape)
     a, p, conv = a.reshape(shape), p.reshape(shape), conv.reshape(shape)
     b = shape[0]
     sol = JointSolution(
@@ -361,7 +394,7 @@ def _solve_batch_fused(batch: ProblemBatch, power_solver: str,
         objective=jax.vmap(WirelessFLProblem.objective)(batch.problem, a),
         n_iters=jnp.broadcast_to(iters, (b,)),
         converged=conv.reshape(b, -1).all(axis=1),
-        inner_iters=inner)
+        inner_iters=inner, bits=bits)
     return _mask_solution(sol, batch.mask)
 
 
@@ -377,7 +410,8 @@ def solve_joint_batch(batch: ProblemBatch,
                       chunk_elements: Optional[int] = None,
                       interpret: Optional[bool] = None,
                       sanitize: bool = False,
-                      init: Optional[WarmStart] = None) -> BatchSolution:
+                      init: Optional[WarmStart] = None,
+                      bit_menu: Optional[tuple] = None) -> BatchSolution:
     """Solve every instance of ``batch`` in one jitted, device-sharded call.
 
     ``sanitize=True`` runs ``WirelessFLProblem.sanitize`` over the
@@ -432,10 +466,23 @@ def solve_joint_batch(batch: ProblemBatch,
     (``inner_iters``) change.  The direct methods ("optimal"/"kernel")
     and the fixed-trip "fused_kernel" have no iteration to warm-start
     and reject ``init``.
+
+    ``bit_menu`` (method="fused" only) runs the joint bit/power/selection
+    solve — see ``solve_joint_fused`` — and fills ``BatchSolution.bits``.
     """
     if method not in ("alternating", "fused", "optimal", "kernel",
                       "fused_kernel"):
         raise ValueError(f"unknown method {method!r}")
+    if bit_menu is not None and method != "fused":
+        raise ValueError(
+            f"bit_menu is implemented by the fused single-level solver "
+            f"only; method={method!r} would silently ignore it")
+    if method in ("kernel", "fused_kernel") and batch.problem.bits is not None:
+        raise ValueError(
+            "the Pallas kernel methods compile a single static payload and "
+            "would silently ignore the per-device bits leaf; use "
+            "method='fused' (or 'alternating'/'optimal') for bit-scaled "
+            "problems")
     if sanitize:
         prob, _ = batch.problem.sanitize()
         batch = dataclasses.replace(batch, problem=prob)
@@ -467,9 +514,11 @@ def solve_joint_batch(batch: ProblemBatch,
             "would be silently ignored — use method='fused' for the "
             "Dinkelbach reference mode")
     if method == "fused":
+        menu = None if bit_menu is None else tuple(
+            sorted({float(b) for b in bit_menu}, reverse=True))
         return _solve_batch_fused(batch, power_solver, faithful_eq13_typo,
                                   eps, max_iters, chunk_elements, mesh, shard,
-                                  init)
+                                  init, menu)
     if shard:
         batch = shard_batch(batch, mesh)
     if method == "kernel":

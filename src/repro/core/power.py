@@ -175,21 +175,26 @@ def element_warm_lambda(a0, p0, pg, bw, *, s_bits: float,
 # -------------------------------------------------------- problem level
 
 def _element_operands(problem: WirelessFLProblem, a: jax.Array):
-    """``(a, pg, bw)`` broadcast to a common element rank.
+    """``(a, pg, bw, s)`` broadcast to a common element rank.
 
     A 1-d ``a`` on a fading problem is materialised to the path gain's
     ``[N, K]`` shape ("same probability, each round's channel" — the
     ``problem.py`` broadcasting contract) so the element-level while
     loops carry shape-stable state; ``bw`` gains a trailing round axis
-    whenever any operand is per-round.
+    whenever any operand is per-round.  ``s`` is the effective payload
+    :meth:`WirelessFLProblem.payload_bits` at that rank — the static
+    python float when the problem has no ``bits`` leaf (the element
+    closed forms are pure elementwise jnp math, so float and array
+    payloads trace identically apart from the extra broadcast).
     """
     pg = problem._pg(a)
     bw = problem.bandwidth_hz
-    if max(a.ndim, pg.ndim) > bw.ndim:
+    rank = max(a.ndim, pg.ndim)
+    if rank > bw.ndim:
         bw = bw[:, None]
     if a.ndim < pg.ndim:
         a = jnp.broadcast_to(a[:, None], pg.shape)
-    return a, pg, bw
+    return a, pg, bw, problem.payload_bits(rank)
 
 
 def dinkelbach_power(problem: WirelessFLProblem,
@@ -199,9 +204,9 @@ def dinkelbach_power(problem: WirelessFLProblem,
                      eps: float = 1e-6,
                      max_iters: int = 64) -> PowerSolution:
     """Vectorised Algorithm 1 over every (i, k) subproblem simultaneously."""
-    a, pg, bw = _element_operands(problem, a)
+    a, pg, bw, s = _element_operands(problem, a)
     p, lam, iters, feasible = dinkelbach_power_elements(
-        a, pg, bw, s_bits=problem.grad_size_bits, tau=problem.tau_th,
+        a, pg, bw, s_bits=s, tau=problem.tau_th,
         p_max=problem.p_max, lam0=lam0, eps=eps, max_iters=max_iters)
     return PowerSolution(power=p, lam=lam, n_iters=iters, feasible=feasible)
 
@@ -209,9 +214,9 @@ def dinkelbach_power(problem: WirelessFLProblem,
 def analytic_power(problem: WirelessFLProblem, a: jax.Array) -> PowerSolution:
     """Closed-form optimum of (9): the ratio is increasing in P, so
     P* = clip(P^min(a), 0, P^max).  Beyond-paper solver fast path."""
-    a, pg, bw = _element_operands(problem, a)
+    a, pg, bw, s = _element_operands(problem, a)
     p, lam, feasible = analytic_power_elements(
-        a, pg, bw, s_bits=problem.grad_size_bits, tau=problem.tau_th,
+        a, pg, bw, s_bits=s, tau=problem.tau_th,
         p_max=problem.p_max)
     return PowerSolution(power=p, lam=lam, n_iters=jnp.int32(0), feasible=feasible)
 

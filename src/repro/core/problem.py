@@ -50,6 +50,11 @@ import numpy as np
 
 LN2 = float(np.log(2.0))
 
+# Uncompressed payload of the paper's model: 199_210 fp32 parameters.
+# The single source of truth for the magic number — examples, benchmarks
+# and the bit-allocation code all import it from here.
+GRAD_SIZE_BITS_FP32 = 199_210 * 32.0
+
 # neutral per-device fills used to overwrite unhealthy device rows (see
 # ``WirelessFLProblem.sanitize``): a zero energy budget makes every solver
 # self-deselect the slot (a* = 0, P* = 0) while distance/bandwidth 1 keep
@@ -61,6 +66,7 @@ NEUTRAL_FILLS = dict(distance_m=1.0, bandwidth_hz=1.0, energy_budget_j=0.0,
                      weights=0.0)
 _FADING_FILL = 1.0
 _INTERFERENCE_FILL = 0.0
+_BITS_FILL = 32.0
 
 
 @jax.tree_util.register_dataclass
@@ -89,9 +95,16 @@ class WirelessFLProblem:
     # by the multi-cell outer loop (core.multicell) — raises the
     # effective noise floor sigma^2 -> sigma^2 + I_ik in the SINR.
     interference: Optional[jax.Array] = None
+    # per-device uplink quantisation width b_i in (0, 32] bits/parameter,
+    # [N] or [N, K] (per-round rank-2 requires a fading problem so the
+    # solution rank stays fading-driven, same rule as ``interference``);
+    # None => full-precision fp32 payload (bit-identical to the pre-bits
+    # code path).  Scales the effective payload S_i = S * b_i / 32 in
+    # ``tx_time`` / ``p_min`` / ``upload_energy`` (docs/compression.md).
+    bits: Optional[jax.Array] = None
 
     # --- shared constants (static) ---------------------------------------
-    grad_size_bits: float = dataclasses.field(default=199_210 * 32.0, metadata=dict(static=True))
+    grad_size_bits: float = dataclasses.field(default=GRAD_SIZE_BITS_FP32, metadata=dict(static=True))
     noise_power: float = dataclasses.field(default=1e-12, metadata=dict(static=True))       # sigma^2
     p_max: float = dataclasses.field(default=1.0, metadata=dict(static=True))               # P^max (W)
     tau_th: float = dataclasses.field(default=0.08, metadata=dict(static=True))             # tau^th (s)
@@ -155,9 +168,23 @@ class WirelessFLProblem:
             bw = bw[:, None]
         return bw * jnp.log2(1.0 + p * pg)
 
+    def payload_bits(self, rank: int = 1):
+        """Effective uplink payload S_i = S * b_i / 32 in bits.
+
+        Returns the static python float ``grad_size_bits`` unchanged when
+        ``bits is None`` — every consumer then traces the exact same
+        constant-folded expression as before the bits leaf existed, which
+        is what keeps ``bits=None`` problems byte-identical.  With a bits
+        leaf the result is an array broadcast to ``rank``.
+        """
+        if self.bits is None:
+            return self.grad_size_bits
+        return self.grad_size_bits * _bcast_like(self.bits, rank) / 32.0
+
     def tx_time(self, power: jax.Array) -> jax.Array:
-        """Transmission time T_ik(P) = S / r_ik(P)  (eq. 1)."""
-        return self.grad_size_bits / jnp.maximum(self.rate(power), 1e-30)
+        """Transmission time T_ik(P) = S_i / r_ik(P)  (eq. 1, bit-scaled)."""
+        r = jnp.maximum(self.rate(power), 1e-30)
+        return self.payload_bits(r.ndim) / r
 
     def compute_energy(self) -> jax.Array:
         """E^c_i = kappa C_i |D_i| gamma_i^2  (eq. 5)."""
@@ -191,7 +218,8 @@ class WirelessFLProblem:
         bw = self.bandwidth_hz
         if max(av.ndim, pg.ndim) > bw.ndim:
             bw = bw[:, None]
-        exponent = av * self.grad_size_bits / (bw * self.tau_th)
+        exponent = av * self.payload_bits(max(av.ndim, pg.ndim)) \
+            / (bw * self.tau_th)
         # exp2 overflows fast; clamp exponent so infeasible entries give a
         # huge-but-finite P^min (> p_max), which downstream logic treats as
         # "infeasible at this a" rather than producing NaNs.
@@ -270,6 +298,12 @@ class WirelessFLProblem:
             if iv.ndim > rank:
                 i_ok = i_ok.all(axis=-1)
             ok = ok & i_ok
+        if self.bits is not None:
+            bv = xp.asarray(self.bits)
+            b_ok = finite(bv) & (bv > 0)
+            if bv.ndim > rank:
+                b_ok = b_ok.all(axis=-1)
+            ok = ok & b_ok
         return ok
 
     def sanitize(self, health: Optional[jax.Array] = None
@@ -298,6 +332,9 @@ class WirelessFLProblem:
                  else health)
             repl["interference"] = jnp.where(h, self.interference,
                                              _INTERFERENCE_FILL)
+        if self.bits is not None:
+            h = health[..., None] if self.bits.ndim > rank else health
+            repl["bits"] = jnp.where(h, self.bits, _BITS_FILL)
         return dataclasses.replace(self, **repl), health
 
     def validate(self) -> None:
@@ -329,7 +366,7 @@ def sample_problem(rng: np.random.Generator | int,
                    total_bandwidth_hz: float = 10e6,
                    tau_th: float = 0.08,
                    p_max: float = 1.0,
-                   grad_size_bits: float = 199_210 * 32.0,
+                   grad_size_bits: float = GRAD_SIZE_BITS_FP32,
                    n_rounds: int = 1,
                    energy_budget_range: tuple[float, float] = (1e-3, 100.0),
                    dataset_total: int = 60_000,

@@ -140,8 +140,12 @@ def slice_round(problem: WirelessFLProblem, k: int) -> WirelessFLProblem:
     """
     if problem.fading is None:
         raise ValueError("slice_round needs a fading ([N, K]) problem")
+    bits = problem.bits
+    if bits is not None and bits.ndim == 2:
+        bits = bits[:, k:k + 1]
     return dataclasses.replace(problem,
                                fading=problem.fading[:, k:k + 1],
+                               bits=bits,
                                n_rounds=1)
 
 
@@ -316,6 +320,20 @@ def _interference_grid(seed, *, n_cells: int = 16, n_devices: int = 32,
     return make_multicell(problems,
                           grid_coupling(n_cells, gain=coupling_gain,
                                         alpha=alpha))
+
+
+@register("bandwidth_starved",
+          "Rural macro-cell: 32 devices share only 2 MHz with generous "
+          "energy budgets (log-uniform in [1, 100] J) — the round deadline "
+          "(7c) binds nearly everywhere, so the fp32 payload caps a*_i at "
+          "tau/T_i and the joint bit-allocation step (docs/compression.md) "
+          "buys participation roughly linearly in 32/b.",
+          "beyond-paper", n_devices=32)
+def _bandwidth_starved(seed, *, n_devices: int = 32,
+                       **kw) -> WirelessFLProblem:
+    kw.setdefault("total_bandwidth_hz", 2e6)
+    kw.setdefault("energy_budget_range", (1.0, 100.0))
+    return sample_problem(seed, n_devices, **kw)
 
 
 @register("sparse_energy_starved",

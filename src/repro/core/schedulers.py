@@ -81,6 +81,9 @@ class ProbabilisticScheduler:
     power_solver: str = "dinkelbach"   # "dinkelbach" (paper) | "analytic" (fast path)
     unbiased_aggregation: bool = False  # beyond-paper alpha_i / a_i correction
     faithful_eq13_typo: bool = False
+    # joint bit/power/selection: menu of uplink widths, e.g. (4, 6, 8, 16,
+    # 32) — fused solver only (docs/compression.md); None = fp32 payload
+    bit_menu: Optional[tuple] = None
 
     def solve(self, problem: WirelessFLProblem,
               init: Optional[WarmStart] = None) -> JointSolution:
@@ -91,6 +94,10 @@ class ProbabilisticScheduler:
         on a drifted problem (see ``core.alternating``).  The exact
         "optimal" solver has no iteration to warm-start and rejects it.
         """
+        if self.bit_menu is not None and self.solver != "fused":
+            raise ValueError(
+                f"bit_menu is implemented by the fused single-level solver "
+                f"only; solver={self.solver!r} would silently ignore it")
         if self.solver == "optimal":
             if init is not None:
                 raise ValueError("solver='optimal' computes the exact "
@@ -101,7 +108,7 @@ class ProbabilisticScheduler:
             # (analytic) power update — it IS the Dinkelbach fixed point
             return solve_joint_fused(problem,
                                      faithful_eq13_typo=self.faithful_eq13_typo,
-                                     init=init)
+                                     init=init, bit_menu=self.bit_menu)
         return solve_joint(problem, power_solver=self.power_solver,
                            faithful_eq13_typo=self.faithful_eq13_typo,
                            init=init)
@@ -142,6 +149,8 @@ class ProbabilisticScheduler:
             kw.setdefault("power_solver", self.power_solver)
         if kw["method"] in ("alternating", "fused", "fused_kernel"):
             kw.setdefault("faithful_eq13_typo", self.faithful_eq13_typo)
+        if kw["method"] == "fused":
+            kw.setdefault("bit_menu", self.bit_menu)
         return solve_joint_batch(batch, **kw)
 
     def precompute_batch(self, batch: ProblemBatch, **kw) -> SchedulerState:

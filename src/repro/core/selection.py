@@ -56,5 +56,5 @@ def optimal_selection(problem: WirelessFLProblem,
     emax = _bcast_like(problem.energy_budget_j, rank)
     return selection_update_elements(_bcast_like(power, rank), t, emax, ec,
                                      tau=problem.tau_th,
-                                     s_bits=problem.grad_size_bits,
+                                     s_bits=problem.payload_bits(rank),
                                      faithful_eq13_typo=faithful_eq13_typo)

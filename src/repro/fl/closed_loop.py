@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint
-from repro.core.alternating import WarmStart
+from repro.core.alternating import WarmStart, solve_joint_fused
 from repro.core.problem import WirelessFLProblem
 from repro.core.scenarios import make_problem, slice_round
 from repro.core.schedulers import (
@@ -76,9 +76,15 @@ from repro.serve.faults import FaultPlan, corrupt_problem, dropout_mask
 from repro.serve.fleet_service import FleetControlService, ServiceConfig
 
 #: the paper-style comparison suite (Sec. V benchmarks + the two
-#: stochastic-scheduling baselines from the wider wireless-FL literature)
+#: stochastic-scheduling baselines from the wider wireless-FL literature,
+#: plus the joint bit/power/selection scheme of docs/compression.md)
 CLOSED_LOOP_STRATEGIES = ("probabilistic", "deterministic", "uniform",
-                          "greedy_channel", "lyapunov")
+                          "greedy_channel", "lyapunov", "joint_bits")
+
+#: strategies whose plans carry an uplink bit-width table — they train in
+#: a separate quantized (stacked-aggregation) sweep so the classic
+#: full-precision strategies keep their bit-identical compiled program
+QUANTIZED_STRATEGIES = ("joint_bits",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +102,9 @@ class ClosedLoopConfig:
     uniform_m: Optional[int] = None   # None => expected count of a*
     greedy_m: Optional[int] = None    # None => expected count of a*
     lyapunov_v: float = 1e-4
+    # discrete uplink bit-width menu for the "joint_bits" strategy (the
+    # bit-allocation step of the alternating solver; docs/compression.md)
+    bit_menu: tuple = (8, 16, 32)
     # --- training --------------------------------------------------------
     n_train: int = 2048
     n_test: int = 512
@@ -219,6 +228,23 @@ def _expected_count(a: np.ndarray) -> int:
     return max(1, int(round(float(a.sum(axis=0).mean()))))
 
 
+def joint_bits_state(problem: WirelessFLProblem, config: ClosedLoopConfig
+                     ) -> tuple[object, SchedulerState, np.ndarray]:
+    """(scheduler, state, bits [N, K]) for the joint bit/power/selection
+    scheme: one fused solve with the bit-allocation step over
+    ``config.bit_menu``.
+
+    Problem (7) stays separable per (i, k) with the bits variable, so
+    the one-shot trajectory solve equals the per-round online stream the
+    other strategies consume (see ``solve_rounds``); what it adds is the
+    per-device payload choice b_ik that the quantized sweep trains with.
+    """
+    sol = solve_joint_fused(problem, bit_menu=tuple(config.bit_menu))
+    state = SchedulerState(a=sol.a, power=sol.power,
+                           agg_weights=_data_weights(problem))
+    return ProbabilisticScheduler(), state, np.asarray(sol.bits, np.float32)
+
+
 def strategy_state(name: str, problem: WirelessFLProblem,
                    control: ControlTrace, config: ClosedLoopConfig
                    ) -> tuple[object, SchedulerState]:
@@ -228,6 +254,8 @@ def strategy_state(name: str, problem: WirelessFLProblem,
     control plane's per-round solutions; the baselines are count-matched
     (uniform, greedy) or budget-matched (Lyapunov) but ignore the solve,
     exactly as the paper's Sec. V benchmarks ignore Algorithm 2.
+    ``joint_bits`` re-solves with the discrete bit-width menu (use
+    :func:`joint_bits_state` directly when the bits table is needed too).
     """
     a = jnp.asarray(control.a, jnp.float32)          # [N, K]
     power = jnp.asarray(control.power, jnp.float32)
@@ -252,6 +280,9 @@ def strategy_state(name: str, problem: WirelessFLProblem,
     if name == "lyapunov":
         sch = LyapunovScheduler(v=config.lyapunov_v)
         return sch, sch.precompute(problem)
+    if name == "joint_bits":
+        sch, state, _ = joint_bits_state(problem, config)
+        return sch, state
     raise KeyError(f"unknown closed-loop strategy {name!r}; "
                    f"choose from {CLOSED_LOOP_STRATEGIES}")
 
@@ -266,13 +297,16 @@ def _fl_config(config: ClosedLoopConfig, run: int) -> FLConfig:
                     seed=config.seed + 101 * run)
 
 
-def _summarise(history: FLHistory, state: SchedulerState) -> dict:
+def _summarise(history: FLHistory, state: SchedulerState,
+               bits: Optional[np.ndarray] = None) -> dict:
     a = np.asarray(state.a)
     exp_parts = float(a.sum(axis=0).mean()) if a.ndim == 2 \
         else float(a.sum())
     return {
         "expected_participants": exp_parts,
         "mean_participants": float(history.participants.mean()),
+        # fleet-mean uplink payload width (32 = full-precision fp32)
+        "mean_bits": 32.0 if bits is None else float(np.mean(bits)),
         "total_energy_j": float(history.energy[-1]),
         "completion_time_s": float(history.sim_time[-1]),
         "final_acc": float(history.eval_acc[-1]),
@@ -320,23 +354,55 @@ def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
     # so it consumes the sanitised problem; identity when fault-free
     plan_problem = problem if plan is None else problem.sanitize()[0]
 
+    # classic full-precision plans and quantized (bits-table) plans train
+    # in separate sweeps: the bits leaf changes the compiled program and
+    # needs stacked aggregation, and splitting keeps the classic
+    # strategies' program bit-identical to the pre-compression pipeline
     plans, labels, configs = [], [], []
+    qplans, qlabels, qconfigs = [], [], []
     states: dict[str, SchedulerState] = {}
+    bits_tables: dict[str, np.ndarray] = {}
+    n_plans = 0
     for name in strategies:
-        sch, state = strategy_state(name, plan_problem, control, config)
+        quantized = name in QUANTIZED_STRATEGIES
+        if quantized:
+            sch, state, bits = joint_bits_state(plan_problem, config)
+            bits_tables[name] = bits
+            # the plan problem carries the solved bits leaf so the
+            # tx-time/energy tables reflect the reduced payload (eq. 1)
+            qprob = dataclasses.replace(plan_problem,
+                                        bits=jnp.asarray(bits, jnp.float32))
+        else:
+            sch, state = strategy_state(name, plan_problem, control, config)
         states[name] = state
         for run in range(max(config.n_seeds, 1)):
             cfg = _fl_config(config, run)
             drops = None if plan is None else dropout_mask(
-                plan.seed + 31 * len(plans), config.n_rounds,
+                plan.seed + 31 * n_plans, config.n_rounds,
                 config.n_devices, plan.drop_rate)
-            plans.append(plan_trajectory(plan_problem, sch, parts, cfg,
-                                         state=state, drops=drops))
-            labels.append(name)
-            configs.append(cfg)
+            n_plans += 1
+            if quantized:
+                cfg = dataclasses.replace(cfg, aggregate="stacked")
+                qplans.append(plan_trajectory(qprob, sch, parts, cfg,
+                                              state=state, drops=drops,
+                                              bits=bits))
+                qlabels.append(name)
+                qconfigs.append(cfg)
+            else:
+                plans.append(plan_trajectory(plan_problem, sch, parts, cfg,
+                                             state=state, drops=drops))
+                labels.append(name)
+                configs.append(cfg)
 
-    sweep = run_fl_sweep(stack_plans(plans), train, test, configs[0],
-                         init_sweep_params(configs), **sweep_kw)
+    histories: dict[str, list[FLHistory]] = {name: [] for name in strategies}
+    for g_plans, g_labels, g_cfgs in ((plans, labels, configs),
+                                      (qplans, qlabels, qconfigs)):
+        if not g_plans:
+            continue
+        sweep = run_fl_sweep(stack_plans(g_plans), train, test, g_cfgs[0],
+                             init_sweep_params(g_cfgs), **sweep_kw)
+        for h, lbl in zip(sweep.histories, g_labels):
+            histories[lbl].append(h)
 
     # provenance: report the service configuration actually used (an
     # explicit ``service`` argument overrides ``config.service``)
@@ -362,8 +428,8 @@ def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
             "drop_rate": plan.drop_rate,
         }
     for name in strategies:
-        runs = [_summarise(h, states[name])
-                for h, s in zip(sweep.histories, labels) if s == name]
+        runs = [_summarise(h, states[name], bits=bits_tables.get(name))
+                for h in histories[name]]
         agg = {k: float(np.mean([r[k] for r in runs])) for k in runs[0]}
         out["strategies"][name] = agg
     return out
@@ -371,6 +437,7 @@ def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
 
 _COLUMNS = (("expected_participants", "E[|S|]", "{:8.2f}"),
             ("mean_participants", "mean|S|", "{:8.2f}"),
+            ("mean_bits", "bits", "{:6.1f}"),
             ("total_energy_j", "energy(J)", "{:10.2f}"),
             ("completion_time_s", "time(s)", "{:9.2f}"),
             ("final_acc", "acc", "{:6.3f}"))

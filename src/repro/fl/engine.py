@@ -104,26 +104,67 @@ def _make_fused_step(lr: float):
     return step
 
 
-def quantize_stochastic(g: jax.Array, key: jax.Array, bits: int) -> jax.Array:
-    """Per-tensor max-scaled b-bit stochastic-rounding quantiser (uplink
-    payload model: b bits/param instead of 32)."""
-    levels = 2.0 ** (bits - 1) - 1
+def quantize_levels(bits) -> float | jax.Array:
+    """Symmetric quantiser level count for a ``bits``-wide payload.
+
+    ``bits=1`` would make the textbook ``2^(b-1) - 1`` zero (scale = inf,
+    NaN output); the floor of one level turns it into ternary
+    sign-quantisation {-1, 0, +1} instead — still unbiased, still
+    clipped.  ``bits`` may be a python int (compile-time constant, the
+    ``FLConfig.uplink_bits`` path) or a traced scalar/array (the
+    per-device ``TrajectoryPlan.bits`` path).
+    """
+    if isinstance(bits, (int, float)):
+        if bits < 1:
+            raise ValueError(f"uplink quantisation needs bits >= 1, got {bits}")
+        return max(2.0 ** (bits - 1) - 1.0, 1.0)
+    return jnp.maximum(2.0 ** (bits - 1.0) - 1.0, 1.0)
+
+
+def quantize_with_noise(g: jax.Array, noise: jax.Array, bits) -> jax.Array:
+    """Deterministic quantiser core given precomputed uniform(0,1) noise.
+
+    The single source of truth for the stochastic-rounding math: the
+    keyed wrapper :func:`quantize_stochastic`, the scan engine's
+    per-device path and the quantized-aggregate Pallas kernel's reference
+    all call (or mirror) this with explicit noise, so kernel-vs-reference
+    agreement is exact rather than distributional.
+    """
+    levels = quantize_levels(bits)
     scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / levels
     scaled = g / scale
     low = jnp.floor(scaled)
     p_up = scaled - low
-    q = low + (jax.random.uniform(key, g.shape) < p_up)
+    q = low + (noise < p_up)
     return jnp.clip(q, -levels, levels) * scale
 
 
-def _quantize_tree(gstack, key: jax.Array, bits: int):
+def quantize_stochastic(g: jax.Array, key: jax.Array, bits) -> jax.Array:
+    """Per-tensor max-scaled b-bit stochastic-rounding quantiser (uplink
+    payload model: b bits/param instead of 32)."""
+    return quantize_with_noise(g, jax.random.uniform(key, g.shape), bits)
+
+
+def _quantize_tree(gstack, key: jax.Array, bits):
+    """Quantise stacked per-client gradients leaf-by-leaf.
+
+    ``bits`` is a python int (every client alike) or a per-client ``[N]``
+    array (the scan engine's per-device plan tables); the key stream —
+    split over leaves, then over clients — is identical either way, so
+    the two engines reproduce each other's noise exactly.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(gstack)
     keys = jax.random.split(key, len(leaves))
+    per_client = not isinstance(bits, (int, float)) and jnp.ndim(bits) == 1
     out = []
     for leaf, k in zip(leaves, keys):
         n = leaf.shape[0]
-        qs = jax.vmap(lambda g, kk: quantize_stochastic(g, kk, bits))(
-            leaf, jax.random.split(k, n))
+        ks = jax.random.split(k, n)
+        if per_client:
+            qs = jax.vmap(quantize_stochastic)(leaf, ks, bits)
+        else:
+            qs = jax.vmap(lambda g, kk: quantize_stochastic(g, kk, bits))(
+                leaf, ks)
         out.append(qs)
     return jax.tree_util.tree_unflatten(treedef, out)
 

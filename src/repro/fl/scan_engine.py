@@ -63,8 +63,9 @@ from repro.core.schedulers import (
     UniformScheduler,
 )
 from repro.data.synthetic import Dataset
-from repro.fl.engine import FLConfig, FLHistory, FLResult
-from repro.kernels.masked_aggregate.ops import masked_aggregate_pytree
+from repro.fl.engine import FLConfig, FLHistory, FLResult, _quantize_tree
+from repro.kernels.masked_aggregate.ops import (masked_aggregate_pytree,
+                                                quantized_aggregate_pytree)
 from repro.models import cnn
 
 # participation-sampling modes fused into the scan body (lax.switch index)
@@ -104,6 +105,13 @@ class TrajectoryPlan:
     # happened.  ``None`` (the default) keeps the fault-free compiled
     # program byte-identical; see docs/robustness.md.
     drops: Optional[jax.Array] = None
+    # [K, N] f32 per-device per-round uplink bit widths b_ik: each
+    # client's round-k gradient is stochastically rounded to b_ik bits
+    # before the eq.-4 aggregation (``engine.quantize_stochastic``'s
+    # stream, fused into the masked-sum kernel when ``use_kernel``).
+    # ``None`` (the default) keeps the full-precision compiled program
+    # byte-identical; see docs/compression.md.
+    bits: Optional[jax.Array] = None
 
     @property
     def n_rounds(self) -> int:
@@ -204,7 +212,8 @@ def plan_trajectory(problem: WirelessFLProblem,
                     *,
                     state: Optional[SchedulerState] = None,
                     dataset_id: int = 0,
-                    drops: Optional[np.ndarray] = None) -> TrajectoryPlan:
+                    drops: Optional[np.ndarray] = None,
+                    bits: Optional[np.ndarray] = None) -> TrajectoryPlan:
     """Build one trajectory's plan, mirroring ``run_fl``'s RNG streams.
 
     ``state`` lets callers reuse one (possibly batched) ``precompute``
@@ -217,11 +226,24 @@ def plan_trajectory(problem: WirelessFLProblem,
     ``drops`` is an optional ``[K, N]`` bool upload-loss table (True =
     the round-k upload from device i never arrives); it rides on the
     plan and switches the sweep into degraded-aggregation mode.
+
+    ``bits`` is an optional ``[N]`` or ``[K, N]`` uplink bit-width table
+    (e.g. ``solve_joint_fused(..., bit_menu=...)``'s per-device choice);
+    ``config.uplink_bits`` is shorthand for a uniform table.  Either
+    switches the sweep into quantized-aggregation mode, which needs
+    ``aggregate='stacked'`` (per-client gradients must exist to
+    quantise) and mirrors ``run_fl``'s quantiser key stream exactly.
     """
     if config.uplink_bits is not None:
-        raise NotImplementedError(
-            "uplink quantisation is only supported by the reference "
-            "python-loop engine (repro.fl.engine.run_fl)")
+        if bits is not None:
+            raise ValueError(
+                "pass either config.uplink_bits (uniform) or a per-device "
+                "bits table, not both")
+        bits = np.full(problem.n_devices, float(config.uplink_bits),
+                       np.float32)
+    if bits is not None and config.aggregate != "stacked":
+        raise ValueError("uplink quantisation requires aggregate='stacked' "
+                         "(per-client gradients must exist to quantise)")
     n = problem.n_devices
     assert len(parts) == n
     k_rounds = config.n_rounds
@@ -265,6 +287,8 @@ def plan_trajectory(problem: WirelessFLProblem,
         unbiased=jnp.asarray(unbiased),
         dataset_id=jnp.int32(dataset_id),
         drops=None if drops is None else jnp.asarray(drops, bool),
+        bits=None if bits is None else jnp.asarray(
+            _per_round(np.asarray(bits), k_rounds, "bit-width table")),
     )
 
 
@@ -310,6 +334,11 @@ def stack_plans(plans: Sequence[TrajectoryPlan]) -> TrajectoryPlan:
         raise ValueError(
             "cannot stack plans with and without drop tables; give the "
             "fault-free plans an all-False [K, N] drops array")
+    with_bits = sum(p.bits is not None for p in plans)
+    if 0 < with_bits < len(plans):
+        raise ValueError(
+            "cannot stack plans with and without bit-width tables; give "
+            "the full-precision plans an all-32 [K, N] bits array")
     ref = plans[0]
     for p in plans[1:]:
         if (p.n_rounds, p.n_devices, p.batch_idx.shape) != (
@@ -335,6 +364,7 @@ class _Static(NamedTuple):
     kernel_interpret: bool
     donate: bool
     faulted: bool               # plan carries a drops table (degraded mode)
+    quantized: bool             # plan carries a bits table (uplink quantise)
 
 
 def _eval_rounds(config: FLConfig) -> tuple[int, ...]:
@@ -366,10 +396,10 @@ def _sweep_fn(static: _Static):
 
         def round_body(carry, xs):
             params, key, cum_t, cum_e = carry
-            if static.faulted:
-                a_k, t_k, e_k, idx, drop_k = xs
-            else:
-                (a_k, t_k, e_k, idx), drop_k = xs, None
+            a_k, t_k, e_k, idx = xs[:4]
+            rest = list(xs[4:])
+            drop_k = rest.pop(0) if static.faulted else None
+            bits_k = rest.pop(0) if static.quantized else None
             key, sub = jax.random.split(key)
             mask = _draw_mask(sub, a_k, plan.mode, plan.m)
             fmask = mask.astype(jnp.float32)
@@ -408,7 +438,19 @@ def _sweep_fn(static: _Static):
                 def client_grad(ci, cl):
                     return jax.grad(cnn.loss_fn)(params, ci, cl)
                 gstack = jax.vmap(client_grad)(img, lab)
-                grads = aggregate(gstack, coef)
+                if bits_k is not None:
+                    # fold_in (not split): same quantiser key stream as
+                    # the reference engine's stacked path
+                    qkey = jax.random.fold_in(sub, 1)
+                    if static.use_kernel:
+                        grads = quantized_aggregate_pytree(
+                            gstack, coef, qkey, bits_k,
+                            interpret=static.kernel_interpret)
+                    else:
+                        grads = aggregate(
+                            _quantize_tree(gstack, qkey, bits_k), coef)
+                else:
+                    grads = aggregate(gstack, coef)
             # an all-zero coef (empty round) makes grads exactly zero, so
             # the update is a no-op — same outcome as the reference's skip
             params = jax.tree_util.tree_map(
@@ -421,6 +463,8 @@ def _sweep_fn(static: _Static):
         xs = (plan.probs, plan.tx_time, plan.round_energy, plan.batch_idx)
         if static.faulted:
             xs = xs + (plan.drops,)
+        if static.quantized:
+            xs = xs + (plan.bits,)
         carry = (params0, plan.key, jnp.float32(0.0), jnp.float32(0.0))
         ys_parts, accs = [], []
         start = 0
@@ -494,11 +538,19 @@ def run_fl_sweep(plans: TrajectoryPlan,
         include_compute_time=config.include_compute_time,
         eval_rounds=_eval_rounds(config), use_kernel=use_kernel,
         kernel_interpret=kernel_interpret, donate=donate_params,
-        faulted=plans.drops is not None)
+        faulted=plans.drops is not None,
+        quantized=plans.bits is not None)
     if config.aggregate not in ("fused", "stacked"):
         raise ValueError(f"unknown aggregate mode {config.aggregate!r}")
     if use_kernel and config.aggregate != "stacked":
         raise ValueError("use_kernel requires aggregate='stacked'")
+    if plans.bits is not None and config.aggregate != "stacked":
+        raise ValueError("quantized plans (bits tables) require "
+                         "aggregate='stacked'")
+    if config.uplink_bits is not None and plans.bits is None:
+        raise ValueError("config.uplink_bits is set but the stacked plans "
+                         "carry no bits table; build them with "
+                         "plan_trajectory(..., config) so the table exists")
 
     train_x, train_y = _stack_datasets(train)
     test_x, test_y = _stack_datasets(test)

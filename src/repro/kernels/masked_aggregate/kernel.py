@@ -35,6 +35,59 @@ def _kernel(g_ref, coef_ref, out_ref):
     out_ref[...] += jnp.sum(g * coef, axis=0, keepdims=True)
 
 
+def _quantized_kernel(g_ref, coef_ref, noise_ref, scale_ref, levels_ref,
+                      out_ref):
+    i = pl.program_id(1)          # client-block index (accumulation dim)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)            # [CLIENT_BLK, LANE_BLK]
+    coef = coef_ref[...].astype(jnp.float32)      # [CLIENT_BLK, 1]
+    noise = noise_ref[...].astype(jnp.float32)    # [CLIENT_BLK, LANE_BLK]
+    scale = scale_ref[...].astype(jnp.float32)    # [CLIENT_BLK, 1]
+    levels = levels_ref[...].astype(jnp.float32)  # [CLIENT_BLK, 1]
+    scaled = g / scale
+    low = jnp.floor(scaled)
+    q = low + (noise < scaled - low).astype(jnp.float32)
+    q = jnp.clip(q, -levels, levels) * scale
+    out_ref[...] += jnp.sum(q * coef, axis=0, keepdims=True)
+
+
+def quantized_masked_aggregate_tiled(gstack: jax.Array, coef: jax.Array,
+                                     noise: jax.Array, scale: jax.Array,
+                                     levels: jax.Array,
+                                     interpret: bool = False) -> jax.Array:
+    """Stochastic-rounding quantisation fused into the masked sum.
+
+    gstack/noise [N, D], coef/scale/levels [N] -> [D] fp32.  ``scale`` and
+    ``levels`` are precomputed per client (scale needs the row-max over
+    the *whole* leaf, which a lane tile cannot see); ``noise`` is
+    precomputed uniform(0,1) so kernel-vs-reference agreement is exact
+    rather than distributional.  N % CLIENT_BLK == 0, D % LANE_BLK == 0
+    (ops.py pads).
+    """
+    n, d = gstack.shape
+    assert n % CLIENT_BLK == 0 and d % LANE_BLK == 0, (n, d)
+    grid = (d // LANE_BLK, n // CLIENT_BLK)
+    out = pl.pallas_call(
+        _quantized_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((CLIENT_BLK, LANE_BLK), lambda j, i: (i, j)),
+            pl.BlockSpec((CLIENT_BLK, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((CLIENT_BLK, LANE_BLK), lambda j, i: (i, j)),
+            pl.BlockSpec((CLIENT_BLK, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((CLIENT_BLK, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LANE_BLK), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(gstack, coef[:, None], noise, scale[:, None], levels[:, None])
+    return out[0]
+
+
 def masked_aggregate_tiled(gstack: jax.Array, coef: jax.Array,
                            interpret: bool = False) -> jax.Array:
     """gstack [N, D], coef [N] -> [D] fp32.  N % CLIENT_BLK == 0,

@@ -7,3 +7,28 @@ def masked_aggregate_ref(gstack: jax.Array, coef: jax.Array) -> jax.Array:
     """out[d] = sum_i coef_i g[i, d], fp32 accumulation."""
     return jnp.einsum("nd,n->d", gstack.astype(jnp.float32),
                       coef.astype(jnp.float32))
+
+
+def quantizer_levels(bits) -> jax.Array:
+    """Symmetric level count with the ternary floor at bits=1 (matches
+    ``repro.fl.engine.quantize_levels`` for array inputs)."""
+    return jnp.maximum(2.0 ** (jnp.asarray(bits, jnp.float32) - 1.0) - 1.0,
+                       1.0)
+
+
+def quantized_masked_aggregate_ref(gstack: jax.Array, coef: jax.Array,
+                                   noise: jax.Array, bits) -> jax.Array:
+    """out[d] = sum_i coef_i Q_{b_i}(g[i, :])[d] with explicit noise.
+
+    Per-client max-scaled stochastic rounding (``engine.quantize_with_noise``
+    with per-row scale) followed by the masked sum; ``bits`` is a scalar or
+    per-client [N] array.
+    """
+    g = gstack.astype(jnp.float32)
+    levels = jnp.broadcast_to(quantizer_levels(bits), (g.shape[0],))[:, None]
+    scale = jnp.maximum(jnp.max(jnp.abs(g), axis=1), 1e-12)[:, None] / levels
+    scaled = g / scale
+    low = jnp.floor(scaled)
+    q = low + (noise.astype(jnp.float32) < scaled - low)
+    q = jnp.clip(q, -levels, levels) * scale
+    return jnp.einsum("nd,n->d", q, coef.astype(jnp.float32))

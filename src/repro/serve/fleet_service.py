@@ -404,6 +404,12 @@ def quantized_problem_key(problem: WirelessFLProblem,
         feats.append(np.asarray(problem.interference, np.float64)
                      + problem.noise_power)
         h.update(repr(problem.interference.shape).encode())
+    if problem.bits is not None:
+        # the payload scale changes tx time / P^min like bandwidth does;
+        # shape marker separates an all-32 leaf from a bits=None problem
+        # (their solutions coincide but their compiled programs differ)
+        feats.append(np.asarray(problem.bits, np.float64))
+        h.update(repr(problem.bits.shape).encode())
     for x in feats:
         q = _quantize(np.asarray(x, np.float64), decimals)
         h.update(repr(q.shape).encode())
@@ -417,7 +423,8 @@ def _compat_key(problem: WirelessFLProblem) -> tuple:
             problem.fading is not None,
             None if problem.fading is None else problem.fading.shape[1],
             None if problem.interference is None
-            else problem.interference.ndim)
+            else problem.interference.ndim,
+            None if problem.bits is None else problem.bits.ndim)
 
 
 def _next_pow2(n: int, floor: int = 1) -> int:
@@ -551,7 +558,12 @@ def _resize_problem(problem: WirelessFLProblem,
     if itf is not None:
         itf = np.asarray(itf)
         itf = jnp.asarray(np.resize(itf, (n,) + itf.shape[1:]))
-    return dataclasses.replace(problem, fading=fad, interference=itf, **kw)
+    bits = problem.bits
+    if bits is not None:
+        bits = np.asarray(bits)
+        bits = jnp.asarray(np.resize(bits, (n,) + bits.shape[1:]))
+    return dataclasses.replace(problem, fading=fad, interference=itf,
+                               bits=bits, **kw)
 
 
 class FleetControlService:

@@ -1,0 +1,386 @@
+"""Joint bit/power/selection optimisation (docs/compression.md).
+
+Covers the four layers the bits variable threads through:
+
+* problem contract — the ``bits`` leaf scales the payload in tx_time /
+  P^min / upload_energy, ``bits=None`` keeps the payload a static python
+  float, and an all-32 leaf solves bitwise identically to ``None``;
+* solver — the menu step (one converged candidate per menu width inside
+  the single fused while_loop + ``select_best_bits`` argmax) strictly
+  buys participation where the time constraint binds, with a golden N=3
+  oracle for the tie-break rules;
+* training — the quantized masked-aggregate kernel matches its jnp
+  oracle and the unfused engine path, and the scan engine's bits-table
+  plans reproduce ``run_fl``'s quantized stream;
+* serving — the bits leaf enters the cache/compat keys and warmup
+  resize.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GRAD_SIZE_BITS_FP32,
+    ProbabilisticScheduler,
+    make_problem,
+    sample_problem,
+    select_best_bits,
+    slice_round,
+    solve_joint,
+    solve_joint_batch,
+    solve_joint_fused,
+    stack_problems,
+)
+
+MENU = (8, 16, 32)
+
+
+def _starved(seed=1, n=32, **kw):
+    return make_problem("bandwidth_starved", seed=seed, n_devices=n, **kw)
+
+
+def _with_bits(problem, bits):
+    return dataclasses.replace(
+        problem, bits=jnp.asarray(np.broadcast_to(
+            np.float32(bits), (problem.n_devices,))))
+
+
+# ------------------------------------------------------- problem contract
+
+class TestProblemContract:
+    def test_bits_none_payload_is_static_float(self):
+        prob = sample_problem(0, 4)
+        assert isinstance(prob.payload_bits(1), float)
+        assert prob.payload_bits(1) == prob.grad_size_bits
+        assert prob.grad_size_bits == GRAD_SIZE_BITS_FP32
+
+    def test_bits_scale_tx_time_and_pmin(self):
+        prob = sample_problem(0, 8)
+        prob8 = _with_bits(prob, 8.0)
+        p = jnp.full(8, 0.05)
+        np.testing.assert_allclose(np.asarray(prob8.tx_time(p)),
+                                   np.asarray(prob.tx_time(p)) / 4.0,
+                                   rtol=1e-6)
+        a = jnp.full(8, 0.5)
+        # P^min is exp-linear in the payload: quartering S quarters the
+        # exponent
+        full = np.log1p(np.asarray(prob.p_min(a))
+                        * np.asarray(prob.path_gain()))
+        quarter = np.log1p(np.asarray(prob8.p_min(a))
+                           * np.asarray(prob8.path_gain()))
+        np.testing.assert_allclose(quarter, full / 4.0, rtol=1e-5)
+
+    def test_bits32_leaf_bitwise_identical_solves(self):
+        """b/32 = 1.0 exactly, so the all-32 leaf must not perturb a
+        single ulp across the solver entry points."""
+        prob = _starved(n=16)
+        prob32 = _with_bits(prob, 32.0)
+        for solver in (solve_joint, solve_joint_fused):
+            s0, s1 = solver(prob), solver(prob32)
+            assert np.array_equal(np.asarray(s0.a), np.asarray(s1.a))
+            assert np.array_equal(np.asarray(s0.power),
+                                  np.asarray(s1.power))
+        batch = stack_problems([prob, _starved(seed=2, n=16)])
+        batch32 = stack_problems([prob32,
+                                  _with_bits(_starved(seed=2, n=16), 32.0)])
+        b0 = solve_joint_batch(batch, method="fused")
+        b1 = solve_joint_batch(batch32, method="fused")
+        assert np.array_equal(np.asarray(b0.a), np.asarray(b1.a))
+
+    def test_sanitize_fills_bad_bits(self):
+        prob = _with_bits(sample_problem(0, 4), 8.0)
+        bad = dataclasses.replace(
+            prob, bits=prob.bits.at[1].set(jnp.nan).at[2].set(0.0))
+        clean, mask = bad.sanitize()
+        assert not bool(mask[1]) and not bool(mask[2])
+        assert np.asarray(clean.bits)[1] == 32.0
+        assert np.isfinite(np.asarray(clean.tx_time(jnp.full(4, 0.05)))).all()
+
+    def test_kernel_batch_method_rejects_bits(self):
+        batch = stack_problems([_with_bits(_starved(n=16), 8.0)])
+        with pytest.raises(ValueError, match="static payload"):
+            solve_joint_batch(batch, method="kernel")
+
+    def test_slice_round_slices_rank2_bits(self):
+        prob = make_problem("drifting_metro", seed=0, n_devices=8,
+                            n_rounds=5)
+        bits = jnp.asarray(
+            np.random.default_rng(0).choice([8.0, 16.0, 32.0], (8, 5)),
+            jnp.float32)
+        prob = dataclasses.replace(prob, bits=bits)
+        sl = slice_round(prob, 3)
+        assert sl.bits.shape == (8, 1)
+        np.testing.assert_array_equal(np.asarray(sl.bits)[:, 0],
+                                      np.asarray(bits)[:, 3])
+
+
+# ----------------------------------------------------------- solver layer
+
+class TestBitAllocationStep:
+    def test_golden_n3_select_best_bits(self):
+        """Hand-built candidate stacks (menu order 32, 16, 8) pin the
+        argmax + tie-break semantics:
+
+        * device 0: narrower is strictly better -> picks 8;
+        * device 1: exact three-way tie (a = 1 capped) -> widest wins;
+        * device 2: float-noise 'gain' within atol -> stays at 32.
+        """
+        s = 1000.0
+        a_m = jnp.asarray([[0.3, 1.0, 0.4],
+                           [0.5, 1.0, 0.4 + 1e-8],
+                           [0.9, 1.0, 0.4]])
+        p_m = jnp.asarray([[1.0, 2.0, 3.0],
+                           [4.0, 5.0, 6.0],
+                           [7.0, 8.0, 9.0]])
+        sbits_m = jnp.asarray([jnp.full(3, s),
+                               jnp.full(3, s / 2),
+                               jnp.full(3, s / 4)])
+        a, p, bits = select_best_bits(a_m, p_m, sbits_m, s_bits=s)
+        np.testing.assert_allclose(np.asarray(bits), [8.0, 32.0, 32.0])
+        np.testing.assert_allclose(np.asarray(a), [0.9, 1.0, 0.4])
+        np.testing.assert_allclose(np.asarray(p), [7.0, 2.0, 3.0])
+
+    def test_menu_buys_participation_when_bandwidth_starved(self):
+        """Acceptance: on the bandwidth-starved scenario the joint solve
+        strictly increases expected participants vs fixed fp32 (>= 1.5x;
+        in the time-binding regime the gain approaches 32/min(menu))."""
+        prob = _starved()
+        e32 = float(jnp.sum(solve_joint_fused(prob).a))
+        solm = solve_joint_fused(prob, bit_menu=MENU)
+        em = float(jnp.sum(solm.a))
+        assert em > 1.5 * e32
+        assert solm.bits is not None and solm.bits.shape == (32,)
+        assert set(np.unique(np.asarray(solm.bits))) <= set(
+            float(b) for b in MENU)
+
+    def test_menu_never_loses_to_any_fixed_width(self):
+        """The per-element argmax dominates every uniform-width solve,
+        including full precision (32 is on the menu)."""
+        prob = _starved(seed=3)
+        em = float(jnp.sum(solve_joint_fused(prob, bit_menu=MENU).a))
+        for b in MENU:
+            eb = float(jnp.sum(solve_joint_fused(_with_bits(prob, b)).a))
+            assert em >= eb - 1e-5
+
+    def test_menu_solution_is_fixed_point_of_chosen_widths(self):
+        """Each element's (a, P) must equal the plain solve at its chosen
+        width — candidates converge at their own fixed points, not at a
+        shared iterate."""
+        prob = _starved(seed=4, n=16)
+        solm = solve_joint_fused(prob, bit_menu=MENU)
+        bits = np.asarray(solm.bits)
+        for b in np.unique(bits):
+            ref = solve_joint_fused(_with_bits(prob, float(b)))
+            sel = bits == b
+            np.testing.assert_allclose(np.asarray(solm.a)[sel],
+                                       np.asarray(ref.a)[sel],
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_batch_fused_menu_matches_instances(self):
+        probs = [_starved(seed=s, n=16) for s in (1, 2)]
+        batch = stack_problems(probs)
+        bsol = solve_joint_batch(batch, method="fused", bit_menu=MENU)
+        assert bsol.bits is not None
+        for i, p in enumerate(probs):
+            ref = solve_joint_fused(p, bit_menu=MENU)
+            inst = bsol.instance(i)
+            np.testing.assert_allclose(np.asarray(inst.a),
+                                       np.asarray(ref.a),
+                                       rtol=1e-5, atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(inst.bits),
+                                          np.asarray(ref.bits))
+
+    def test_batch_non_fused_method_rejects_menu(self):
+        batch = stack_problems([_starved(n=16)])
+        with pytest.raises(ValueError, match="fused"):
+            solve_joint_batch(batch, method="alternating", bit_menu=MENU)
+
+    def test_scheduler_threads_menu(self):
+        prob = _starved(n=16)
+        sch = ProbabilisticScheduler(solver="fused", bit_menu=MENU)
+        state = sch.precompute(prob)
+        plain = ProbabilisticScheduler(solver="fused").precompute(prob)
+        assert float(np.sum(state.a)) > 1.5 * float(np.sum(plain.a))
+        with pytest.raises(ValueError, match="fused"):
+            ProbabilisticScheduler(solver="alternating",
+                                   bit_menu=MENU).precompute(prob)
+
+
+# --------------------------------------------------------- training layer
+
+class TestQuantizedAggregate:
+    def _operands(self, n=20, d=1000, seed=0):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        coef = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+        noise = jnp.asarray(rng.uniform(0, 1, (n, d)), jnp.float32)
+        bits = jnp.asarray(rng.choice([1.0, 4.0, 8.0, 16.0, 32.0], n),
+                           jnp.float32)
+        return g, coef, noise, bits
+
+    def test_kernel_matches_ref(self):
+        from repro.kernels.masked_aggregate.ops import (
+            quantized_masked_aggregate)
+        from repro.kernels.masked_aggregate.ref import (
+            quantized_masked_aggregate_ref)
+        g, coef, noise, bits = self._operands()
+        out = quantized_masked_aggregate(g, coef, noise, bits,
+                                         interpret=True)
+        ref = quantized_masked_aggregate_ref(g, coef, noise, bits)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_pytree_front_end_matches_engine_stream(self):
+        """quantized_aggregate_pytree must reproduce _quantize_tree +
+        weighted sum exactly (same key split order, same math)."""
+        from repro.fl.engine import _quantize_tree
+        from repro.kernels.masked_aggregate.ops import (
+            quantized_aggregate_pytree)
+        rng = np.random.default_rng(1)
+        n = 12
+        tree = {"w": jnp.asarray(rng.normal(size=(n, 25, 40)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(n, 7)), jnp.float32)}
+        coef = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+        bits = jnp.asarray(rng.choice([4.0, 8.0], n), jnp.float32)
+        key = jax.random.PRNGKey(5)
+        ref = jax.tree_util.tree_map(
+            lambda q: jnp.tensordot(coef, q, axes=((0,), (0,))),
+            _quantize_tree(tree, key, bits))
+        out = quantized_aggregate_pytree(tree, coef, key, bits,
+                                         interpret=True)
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestScanEngine:
+    @pytest.fixture(scope="class")
+    def fl_setup(self):
+        from repro.data.partition import dirichlet_partition
+        from repro.data.synthetic import make_mnist_like
+        n = 8
+        train, test = make_mnist_like(400, 100, seed=0)
+        parts = dirichlet_partition(train, n, beta=0.3, seed=1)
+        prob = sample_problem(0, n, tau_th=0.5)
+        return prob, train, parts, test
+
+    def test_uniform_bits_matches_run_fl(self, fl_setup):
+        from repro.fl.engine import FLConfig, run_fl
+        from repro.fl.scan_engine import run_fl_scan
+        prob, train, parts, test = fl_setup
+        cfg = FLConfig(n_rounds=5, eval_every=5, batch_per_client=4,
+                       seed=3, aggregate="stacked", uplink_bits=8)
+        ref = run_fl(prob, ProbabilisticScheduler(), train, parts, test,
+                     cfg)
+        for kw in ({}, {"use_kernel": True}):
+            scan = run_fl_scan(prob, ProbabilisticScheduler(), train,
+                               parts, test, cfg, **kw)
+            for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                            jax.tree_util.tree_leaves(scan.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-4, atol=1e-4)
+            np.testing.assert_array_equal(ref.history.participants,
+                                          scan.history.participants)
+
+    def test_bits_none_plan_and_program_unchanged(self, fl_setup):
+        """PR-8 ``drops=None`` idiom: a quantisation-free config builds a
+        plan with no bits leaf and an unquantized compiled program."""
+        from repro.fl.engine import FLConfig
+        from repro.fl.scan_engine import _Static, plan_trajectory
+        prob, train, parts, test = fl_setup
+        cfg = FLConfig(n_rounds=3, batch_per_client=4, seed=0,
+                       aggregate="stacked")
+        plan = plan_trajectory(prob, ProbabilisticScheduler(), parts, cfg)
+        assert plan.bits is None
+        assert "quantized" in _Static._fields
+
+    def test_per_device_bits_table_runs(self, fl_setup):
+        from repro.fl.engine import FLConfig
+        from repro.fl.scan_engine import (init_sweep_params,
+                                          plan_trajectory, run_fl_sweep,
+                                          stack_plans)
+        prob, train, parts, test = fl_setup
+        cfg = FLConfig(n_rounds=4, eval_every=2, batch_per_client=4,
+                       seed=1, aggregate="stacked")
+        bits = np.random.default_rng(0).choice([8.0, 32.0], 8)
+        plan = plan_trajectory(prob, ProbabilisticScheduler(), parts, cfg,
+                               bits=bits)
+        assert plan.bits.shape == (4, 8)
+        sweep = run_fl_sweep(stack_plans([plan]), train, test, cfg,
+                             init_sweep_params([cfg]), shard=False)
+        for leaf in jax.tree_util.tree_leaves(sweep.params):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+    def test_plan_rejects_bits_with_fused_aggregate(self, fl_setup):
+        from repro.fl.engine import FLConfig
+        from repro.fl.scan_engine import plan_trajectory
+        prob, train, parts, test = fl_setup
+        cfg = FLConfig(n_rounds=2, batch_per_client=4, uplink_bits=8)
+        with pytest.raises(ValueError, match="stacked"):
+            plan_trajectory(prob, ProbabilisticScheduler(), parts, cfg)
+
+    def test_stack_plans_rejects_mixed_bits(self, fl_setup):
+        from repro.fl.engine import FLConfig
+        from repro.fl.scan_engine import plan_trajectory, stack_plans
+        prob, train, parts, test = fl_setup
+        cfg = FLConfig(n_rounds=2, batch_per_client=4,
+                       aggregate="stacked")
+        p0 = plan_trajectory(prob, ProbabilisticScheduler(), parts, cfg)
+        p1 = plan_trajectory(prob, ProbabilisticScheduler(), parts, cfg,
+                             bits=np.full(8, 8.0))
+        with pytest.raises(ValueError, match="bit-width"):
+            stack_plans([p0, p1])
+
+
+# ---------------------------------------------------------- serving layer
+
+class TestServiceKeys:
+    def test_bits_leaf_changes_cache_and_compat_keys(self):
+        from repro.serve.fleet_service import (_compat_key,
+                                               quantized_problem_key)
+        prob = sample_problem(0, 8)
+        prob8 = _with_bits(prob, 8.0)
+        prob32 = _with_bits(prob, 32.0)
+        assert quantized_problem_key(prob) != quantized_problem_key(prob8)
+        # an all-32 leaf solves identically but compiles differently, so
+        # it must not share a bucket with the bits=None program
+        assert quantized_problem_key(prob) != quantized_problem_key(prob32)
+        assert _compat_key(prob) != _compat_key(prob8)
+        assert _compat_key(prob8) == _compat_key(prob32)
+
+    def test_resize_preserves_bits_leaf(self):
+        from repro.serve.fleet_service import _resize_problem
+        prob = _with_bits(sample_problem(0, 8), 8.0)
+        big = _resize_problem(prob, 16)
+        assert big.bits.shape == (16,)
+        assert np.asarray(big.bits).min() == 8.0
+
+    def test_service_solves_bits_problem(self):
+        from repro.serve import FleetControlService, ServiceConfig
+        svc = FleetControlService(ServiceConfig())
+        prob = _with_bits(_starved(n=16), 8.0)
+        resp, = svc.run([("cell-q", prob)])
+        a = np.asarray(resp.solution.a)
+        assert np.isfinite(a).all() and a.max() <= 1.0
+
+
+# ------------------------------------------------------------ closed loop
+
+@pytest.mark.slow
+def test_closed_loop_joint_bits_row():
+    from repro.fl.closed_loop import (ClosedLoopConfig,
+                                      format_closed_loop_table,
+                                      run_closed_loop_grid)
+    cfg = ClosedLoopConfig(n_devices=8, n_rounds=4, n_train=256, n_test=64,
+                           eval_every=2)
+    out = run_closed_loop_grid(cfg, strategies=("probabilistic",
+                                                "joint_bits"))
+    row = out["strategies"]["joint_bits"]
+    assert row["mean_bits"] < 32.0
+    assert np.isfinite(row["final_acc"])
+    table = format_closed_loop_table(out)
+    assert "joint_bits" in table and "bits" in table

@@ -12,6 +12,7 @@ amplified through ReLU sign flips over long runs; the accounting
 exact at any horizon.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -174,12 +175,22 @@ def test_sweep_rejects_mismatched_plans(setup):
         stack_plans([pa, pb])
 
 
-def test_scan_rejects_uplink_quantisation(setup):
+def test_scan_supports_uplink_quantisation(setup):
+    """Used to raise NotImplementedError; the scan engine now lowers
+    config.uplink_bits to a uniform per-device bit table (the full
+    run_fl parity check lives in tests/test_bit_allocation.py)."""
     prob, train, parts, test = setup
     cfg = FLConfig(n_rounds=4, eval_every=4, batch_per_client=2,
                    aggregate="stacked", uplink_bits=8)
-    with pytest.raises(NotImplementedError):
-        run_fl_scan(prob, ProbabilisticScheduler(), train, parts, test, cfg)
+    res = run_fl_scan(prob, ProbabilisticScheduler(), train, parts, test,
+                      cfg)
+    for leaf in jax.tree_util.tree_leaves(res.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    # fused aggregation has no per-client stack to quantise
+    cfg_fused = FLConfig(n_rounds=2, aggregate="fused", uplink_bits=8)
+    with pytest.raises(ValueError):
+        run_fl_scan(prob, ProbabilisticScheduler(), train, parts, test,
+                    cfg_fused)
 
 
 # ------------------------------------------------- determinism (ISSUE 4)

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.fl.engine import FLConfig, quantize_stochastic, run_fl
+from repro.fl.engine import (FLConfig, quantize_levels, quantize_stochastic,
+                             run_fl)
 
 
 class TestQuantizer:
@@ -33,6 +34,77 @@ class TestQuantizer:
             quantize_stochastic(g, jax.random.PRNGKey(3), b) - g)))
             for b in (4, 8, 16)}
         assert errs[4] > errs[8] > errs[16]
+
+    @pytest.mark.parametrize("bits", [1, 2])
+    def test_low_bit_finite_and_clipped(self, bits):
+        """Regression: bits=1 used to make levels = 2^0 - 1 = 0, so
+        scale = max|g| / 0 = inf and the output was NaN."""
+        g = jnp.asarray(np.random.default_rng(3).normal(size=(512,)),
+                        jnp.float32)
+        q = quantize_stochastic(g, jax.random.PRNGKey(0), bits)
+        assert bool(jnp.all(jnp.isfinite(q)))
+        levels = float(quantize_levels(bits))
+        scale = float(jnp.max(jnp.abs(g))) / levels
+        # symmetric range clip and at most 2*levels + 1 distinct values
+        assert float(jnp.max(jnp.abs(q))) <= levels * scale + 1e-6
+        assert len(np.unique(np.asarray(q))) <= 2 * int(levels) + 1
+
+    def test_bits1_is_ternary_sign_quantizer(self):
+        g = jnp.asarray([-3.0, -0.01, 0.0, 0.01, 3.0], jnp.float32)
+        keys = jax.random.split(jax.random.PRNGKey(7), 500)
+        qs = np.asarray(jax.vmap(
+            lambda k: quantize_stochastic(g, k, 1))(keys))
+        assert set(np.unique(qs)) <= {-3.0, 0.0, 3.0}
+        # extremes are deterministic; near-zero entries stay unbiased
+        assert (qs[:, 0] == -3.0).all() and (qs[:, 4] == 3.0).all()
+        np.testing.assert_allclose(qs.mean(0), np.asarray(g), atol=0.15)
+
+    def test_bits32_is_near_lossless(self):
+        g = jnp.asarray(np.random.default_rng(5).normal(size=(512,)),
+                        jnp.float32)
+        q = quantize_stochastic(g, jax.random.PRNGKey(0), 32)
+        # one level at 2^31 - 1 steps: relative error below f32 epsilon
+        np.testing.assert_allclose(np.asarray(q), np.asarray(g),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_rejects_bits_below_one(self):
+        g = jnp.zeros((4,))
+        with pytest.raises(ValueError, match="bits >= 1"):
+            quantize_stochastic(g, jax.random.PRNGKey(0), 0)
+
+    def test_traced_bits_matches_static(self):
+        """Array-valued bits (the scan engine's per-device tables) take
+        the jnp branch of quantize_levels; same result as python ints."""
+        g = jnp.asarray(np.random.default_rng(6).normal(size=(64,)),
+                        jnp.float32)
+        key = jax.random.PRNGKey(2)
+        for b in (1, 4, 8):
+            np.testing.assert_array_equal(
+                np.asarray(quantize_stochastic(g, key, b)),
+                np.asarray(quantize_stochastic(g, key,
+                                               jnp.float32(b))))
+
+    def test_property_unbiased_and_clipped(self):
+        """Hypothesis property when available (the CI image may not ship
+        it): for any gradient and bits, E[q] ~ g and |q| <= max|g|+level."""
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        @hyp.given(st.lists(st.floats(-100, 100, allow_nan=False,
+                                      width=32),
+                            min_size=2, max_size=32),
+                   st.integers(min_value=1, max_value=16),
+                   st.integers(min_value=0, max_value=2**31 - 1))
+        @hyp.settings(max_examples=50, deadline=None)
+        def prop(vals, bits, seed):
+            g = jnp.asarray(vals, jnp.float32)
+            q = quantize_stochastic(g, jax.random.PRNGKey(seed), bits)
+            assert bool(jnp.all(jnp.isfinite(q)))
+            gmax = float(jnp.max(jnp.abs(g)))
+            assert float(jnp.max(jnp.abs(q))) <= gmax + 1e-6 \
+                + gmax / float(quantize_levels(bits))
+
+        prop()
 
 
 class TestFLIntegration:
