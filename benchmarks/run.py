@@ -124,8 +124,10 @@ def bench_batch_solver_scaling(full: bool):
 
     for bsz in batch_sizes:
         batch = stack_problems(probs[:bsz])
-        us_batch = _timeit(lambda: solve_joint_batch(batch).a, n=5)
-        us_loop = _timeit(lambda: naive_loop(probs[:bsz]), n=3, warmup=1)
+        us_batch = _timeit(lambda batch=batch: solve_joint_batch(batch).a,
+                           n=5)
+        us_loop = _timeit(lambda chunk=probs[:bsz]: naive_loop(chunk),
+                          n=3, warmup=1)
         ips_batch = bsz / (us_batch / 1e6)
         ips_loop = bsz / (us_loop / 1e6)
         emit(f"batch_solver_batched_b{bsz}", us_batch,

@@ -1,0 +1,300 @@
+"""Hot-path hygiene auditor: host syncs, donation, weak-type forks.
+
+Three cheap static audits over the code that runs inside ``jax.jit``:
+
+* **Host-sync scan** — an AST pass over ``src/repro`` that finds traced
+  contexts (functions decorated with ``jax.jit``, or passed to
+  ``lax.scan`` / ``while_loop`` / ``fori_loop`` / ``cond`` / ``switch``
+  / ``vmap`` / ``grad``, plus everything nested inside them) and flags
+  calls that force a device→host transfer mid-trace: ``float(x)``,
+  ``x.item()``, ``x.tolist()``, ``np.asarray`` / ``np.array``,
+  ``jax.device_get``.  A deliberate sync is waived by putting
+  ``# analysis: host-sync-ok`` on the offending line.
+
+* **Donation audit** — lowers the scan-engine sweep program with
+  ``donate=True`` and requires one ``tf.aliasing_output`` annotation per
+  donated params leaf in the StableHLO text (donation annotations
+  survive CPU lowering even though the CPU runtime ignores them, so the
+  gate runs anywhere).  A donated-in-name-only signature — declared via
+  ``donate_argnums`` but silently dropped by an intermediate wrapper —
+  is exactly what this catches.
+
+* **Weak-type audit** — inspects the example argument pytrees of the
+  registered hot paths for rank-0 leaves carrying a *strong* default
+  dtype (``float32``/``int32``/``float64``/``int64`` with
+  ``weak_type=False``).  Such a leaf forks the jit cache against the
+  Python-scalar spelling of the same call: ``f(1.0)`` and
+  ``f(jnp.float32(1.0))`` compile two programs.  Scalars that are
+  jit-static (hashable aux data) never reach this check because they
+  are not pytree leaves.
+
+All three return :class:`HygieneFinding` lists; ``run_hygiene`` bundles
+them for ``tools/run_analysis.py``.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "HygieneFinding",
+    "WAIVER",
+    "check_donation",
+    "run_hygiene",
+    "scan_host_syncs",
+    "weak_scalar_findings",
+]
+
+
+WAIVER = "analysis: host-sync-ok"
+
+
+class HygieneFinding(NamedTuple):
+    kind: str        # "host-sync" | "donation" | "weak-type"
+    site: str        # file:line or program name
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] {self.site}: {self.detail}"
+
+
+# --------------------------------------------------------------------------
+# host-sync AST scan
+# --------------------------------------------------------------------------
+
+_TRACING_ENTRY_ATTRS = {
+    # attribute names whose callable arguments are traced
+    "scan", "while_loop", "fori_loop", "cond", "switch", "map",
+    "associative_scan", "custom_root", "custom_linear_solve",
+    "vmap", "grad", "value_and_grad", "jit", "checkpoint", "remat",
+    "pmap", "jacfwd", "jacrev", "hessian", "custom_jvp", "custom_vjp",
+}
+
+_SYNC_BUILTINS = {"float"}
+_SYNC_METHODS = {"item", "tolist"}
+_NUMPY_ALIASES = {"np", "numpy", "onp"}
+_NUMPY_SYNC_FNS = {"asarray", "array"}
+
+
+def _dec_is_jit(dec: ast.expr) -> bool:
+    """Does this decorator expression apply ``jax.jit``?"""
+    if isinstance(dec, ast.Name) and dec.id == "jit":
+        return True
+    if isinstance(dec, ast.Attribute) and dec.attr == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        # partial(jax.jit, ...) / functools.partial(jit, ...) /
+        # jax.jit(static_argnames=...)
+        if _dec_is_jit(dec.func):
+            return True
+        return any(_dec_is_jit(a) for a in dec.args)
+    return False
+
+
+def _call_traces_args(call: ast.Call) -> bool:
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else None)
+    return name in _TRACING_ENTRY_ATTRS
+
+
+def _collect_traced_names(tree: ast.AST) -> set[str]:
+    """Names of functions handed to tracing entry points anywhere."""
+    traced: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _call_traces_args(node):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    traced.add(arg.id)
+    return traced
+
+
+def _is_literal(node: ast.expr) -> bool:
+    try:
+        ast.literal_eval(node)
+    except (ValueError, TypeError, SyntaxError, MemoryError):
+        return False
+    return True
+
+
+def _sync_calls(func: ast.AST, path: pathlib.Path,
+                lines: list[str]) -> list[HygieneFinding]:
+    findings = []
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        what = None
+        if isinstance(fn, ast.Name) and fn.id in _SYNC_BUILTINS:
+            if node.args and _is_literal(node.args[0]):
+                continue            # float(0.5) is a constant, not a sync
+            what = f"{fn.id}() on a (possibly traced) value"
+        elif isinstance(fn, ast.Attribute):
+            if fn.attr in _SYNC_METHODS:
+                what = f".{fn.attr}() forces a device->host transfer"
+            elif (fn.attr in _NUMPY_SYNC_FNS
+                  and isinstance(fn.value, ast.Name)
+                  and fn.value.id in _NUMPY_ALIASES):
+                what = (f"{fn.value.id}.{fn.attr}() materialises a traced "
+                        "value on the host")
+            elif (fn.attr == "device_get"
+                  and isinstance(fn.value, ast.Name)
+                  and fn.value.id == "jax"):
+                what = "jax.device_get() inside a traced context"
+        if what is None:
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if WAIVER in line:
+            continue
+        findings.append(HygieneFinding(
+            kind="host-sync",
+            site=f"{path}:{node.lineno}",
+            detail=what))
+    return findings
+
+
+def scan_host_syncs(root: Optional[pathlib.Path] = None
+                    ) -> tuple[list[HygieneFinding], dict]:
+    """AST-scan every module under ``root`` (default: ``src/repro``)."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[1]
+    findings: list[HygieneFinding] = []
+    n_traced = 0
+    files = sorted(root.rglob("*.py"))
+    for path in files:
+        if "analysis" in path.parts and path.name != "__init__.py":
+            continue        # the auditor's own fixtures are out of scope
+        src = path.read_text()
+        try:
+            tree = ast.parse(src)
+        except SyntaxError:
+            continue
+        lines = src.splitlines()
+        traced_names = _collect_traced_names(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            is_traced = (node.name in traced_names
+                         or any(_dec_is_jit(d) for d in node.decorator_list))
+            if not is_traced:
+                continue
+            n_traced += 1
+            findings.extend(_sync_calls(node, path, lines))
+    stats = {"files_scanned": len(files), "traced_functions": n_traced}
+    return findings, stats
+
+
+# --------------------------------------------------------------------------
+# donation audit
+# --------------------------------------------------------------------------
+
+def check_donation() -> tuple[list[HygieneFinding], dict]:
+    """The scan-engine sweep declares ``donate_argnums=(1,)`` for the
+    init-params buffers when built with ``donate=True``.  Require the
+    declaration to survive into the lowered StableHLO as one
+    ``tf.aliasing_output`` per params leaf, and require the undonated
+    build to carry none (a phantom alias would corrupt caller buffers).
+    """
+    from repro.analysis.prng import _sweep_static_and_args
+
+    findings: list[HygieneFinding] = []
+    stats: dict = {}
+    for donate in (True, False):
+        fn, args = _sweep_static_and_args(donate=donate)
+        text = fn.lower(*args).as_text()
+        n_alias = text.count("tf.aliasing_output")
+        n_leaves = len(jax.tree_util.tree_leaves(args[1]))
+        stats["aliased_outputs" if donate else
+              "aliased_outputs_undonated"] = n_alias
+        if donate and n_alias < n_leaves:
+            findings.append(HygieneFinding(
+                kind="donation",
+                site="fl.scan_engine._sweep_fn(donate=True)",
+                detail=f"only {n_alias}/{n_leaves} params leaves carry "
+                       "tf.aliasing_output in the lowered module — "
+                       "donate_argnums was declared but dropped"))
+        if not donate and n_alias != 0:
+            findings.append(HygieneFinding(
+                kind="donation",
+                site="fl.scan_engine._sweep_fn(donate=False)",
+                detail=f"{n_alias} aliased output(s) in an undonated "
+                       "build — caller buffers would be invalidated"))
+    stats["params_leaves"] = len(jax.tree_util.tree_leaves(args[1]))
+    return findings, stats
+
+
+# --------------------------------------------------------------------------
+# weak-type audit
+# --------------------------------------------------------------------------
+
+_STRONG_DEFAULT_DTYPES = {np.dtype(np.float32), np.dtype(np.int32),
+                          np.dtype(np.float64), np.dtype(np.int64)}
+
+
+def weak_scalar_findings(tree, *, program: str) -> list[HygieneFinding]:
+    """Flag rank-0 leaves with a strong default dtype in a jit argument
+    pytree: they fork the compile cache against the Python-scalar
+    spelling of the same call."""
+    findings = []
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    del treedef
+    for i, leaf in enumerate(leaves):
+        aval = jax.eval_shape(lambda x: x, leaf)
+        if aval.shape != ():
+            continue
+        if getattr(aval, "weak_type", False):
+            continue
+        if isinstance(leaf, (bool, int, float)):
+            continue        # python scalars stay weak under jit
+        if jnp.issubdtype(aval.dtype, jax.dtypes.prng_key):
+            continue
+        if np.dtype(aval.dtype) in _STRONG_DEFAULT_DTYPES:
+            findings.append(HygieneFinding(
+                kind="weak-type",
+                site=f"{program} (leaf {i})",
+                detail=f"rank-0 {aval.dtype} leaf with weak_type=False "
+                       "forks the jit cache against the python-scalar "
+                       "spelling of this argument"))
+    return findings
+
+
+def check_weak_types() -> tuple[list[HygieneFinding], dict]:
+    """Audit the argument pytrees of the production entry points whose
+    inputs are cheap to build (problem pytrees and sweep plans)."""
+    from repro.analysis.prng import _sweep_static_and_args
+    from repro.core.batch import pad_batch, stack_problems
+    from repro.core.problem import sample_problem
+
+    findings: list[HygieneFinding] = []
+    prob = sample_problem(0, 8)
+    findings += weak_scalar_findings(prob, program="sample_problem")
+    batch = pad_batch(stack_problems([sample_problem(i, 8)
+                                      for i in range(2)]),
+                      batch_size=2, n_max=8)
+    findings += weak_scalar_findings(batch, program="pad_batch")
+    _, args = _sweep_static_and_args(donate=False)
+    findings += weak_scalar_findings(args, program="scan_engine_sweep args")
+    return findings, {"programs_checked": 3}
+
+
+# --------------------------------------------------------------------------
+
+def run_hygiene() -> dict:
+    """All three audits; the shape ``tools/run_analysis.py`` serialises."""
+    sync_findings, sync_stats = scan_host_syncs()
+    don_findings, don_stats = check_donation()
+    weak_findings, weak_stats = check_weak_types()
+    findings = sync_findings + don_findings + weak_findings
+    return {
+        "findings": [str(f) for f in findings],
+        "n_findings": len(findings),
+        "host_sync": sync_stats,
+        "donation": don_stats,
+        "weak_type": weak_stats,
+    }

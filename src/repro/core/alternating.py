@@ -267,7 +267,7 @@ def solve_joint_trace(problem: WirelessFLProblem,
     converged = False
     it = 0
     inner = jnp.int32(0)
-    for it in range(1, max_iters + 1):
+    for it in range(1, max_iters + 1):  # noqa: B007 - read after the loop (n_iters)
         a, p, k = step(problem, a)
         inner = inner + k
         obj = problem.objective(a)

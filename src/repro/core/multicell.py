@@ -372,7 +372,7 @@ def solve_coupled(mc: MultiCellProblem,
     load = np.zeros(k_rounds) if per_round else np.float64(0.0)
     residual, converged, t = float("inf"), False, 0
     best = None   # best-residual iterate: (residual, bs, a_proj, mu, load, I)
-    for t in range(1, outer_iters + 1):
+    for t in range(1, outer_iters + 1):  # noqa: B007 - read after the loop
         bs = solve_joint_batch(
             _with_interference(cells, interference), method=method,
             power_solver=power_solver, eps=eps, max_iters=max_iters,
@@ -481,7 +481,7 @@ def solve_coupled_loop(mc: MultiCellProblem,
     p_pad = np.zeros_like(a_pad)
     residual, converged, t = float("inf"), False, 0
     conv_all = True
-    for t in range(1, outer_iters + 1):
+    for t in range(1, outer_iters + 1):  # noqa: B007 - read after the loop
         sols = []
         for c, prob in enumerate(problems):
             i_c = interference[c]

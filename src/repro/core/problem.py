@@ -133,20 +133,24 @@ class WirelessFLProblem:
                 return base
             # a corrupted channel draw (g = 0, NaN) against a tiny d2s
             # must gate the device out (gain 0 => P^min = inf), not emit
-            # 0 * inf = NaN; g > 0 leaves healthy draws bit-identical
-            return jnp.where(g > 0, g * base[:, None], 0.0)
+            # 0 * inf = NaN; g > 0 leaves healthy draws bit-identical.
+            # A rank-1 fading (round-invariant draw) stays rank 1: lifting
+            # base to [:, None] against an [N] g builds [N, N] garbage
+            # that broadcasts silently whenever K == N.
+            return jnp.where(g > 0, g * _bcast_like(base, g.ndim), 0.0)
         # d^2 sigma^2 + d^2 I: the I == 0 case reduces to d^2 sigma^2
         # exactly (adding a true zero is exact in IEEE), so zero
         # interference matches interference=None bit-for-bit.
         d2 = jnp.square(self.distance_m)
-        rank = 2 if (self.fading is not None
+        rank = 2 if ((self.fading is not None and self.fading.ndim == 2)
                      or self.interference.ndim == 2) else 1
         iv = _bcast_like(self.interference, rank)
         denom = _bcast_like(d2s, rank) + _bcast_like(d2, rank) * iv
         pg = 1.0 / denom
         if self.fading is None:
             return pg
-        return jnp.where(g > 0, g * pg, 0.0)
+        gv = _bcast_like(g, pg.ndim)
+        return jnp.where(gv > 0, gv * pg, 0.0)
 
     def _pg(self, like: jax.Array) -> jax.Array:
         """path_gain broadcast to the rank of ``like`` ([N] or [N, K])."""
@@ -182,9 +186,15 @@ class WirelessFLProblem:
         return self.grad_size_bits * _bcast_like(self.bits, rank) / 32.0
 
     def tx_time(self, power: jax.Array) -> jax.Array:
-        """Transmission time T_ik(P) = S_i / r_ik(P)  (eq. 1, bit-scaled)."""
+        """Transmission time T_ik(P) = S_i / r_ik(P)  (eq. 1, bit-scaled).
+
+        A rank-2 ``bits`` table lifts the result to ``[N, K]`` even for a
+        rank-1 power (per-round payloads at a fixed transmit power) —
+        the same highest-rank rule every other leaf follows.
+        """
         r = jnp.maximum(self.rate(power), 1e-30)
-        return self.payload_bits(r.ndim) / r
+        rank = r.ndim if self.bits is None else max(r.ndim, self.bits.ndim)
+        return self.payload_bits(rank) / _bcast_like(r, rank)
 
     def compute_energy(self) -> jax.Array:
         """E^c_i = kappa C_i |D_i| gamma_i^2  (eq. 5)."""
@@ -214,12 +224,13 @@ class WirelessFLProblem:
         (same probability, each round's channel), exactly like ``rate``.
         """
         pg = self._pg(a)
-        av = a if a.ndim >= pg.ndim else a[:, None]
-        bw = self.bandwidth_hz
-        if max(av.ndim, pg.ndim) > bw.ndim:
-            bw = bw[:, None]
-        exponent = av * self.payload_bits(max(av.ndim, pg.ndim)) \
-            / (bw * self.tau_th)
+        rank = max(a.ndim, pg.ndim)
+        if self.bits is not None:
+            rank = max(rank, self.bits.ndim)
+        av = _bcast_like(a, rank)
+        pgv = _bcast_like(pg, rank)
+        bw = _bcast_like(self.bandwidth_hz, rank)
+        exponent = av * self.payload_bits(rank) / (bw * self.tau_th)
         # exp2 overflows fast; clamp exponent so infeasible entries give a
         # huge-but-finite P^min (> p_max), which downstream logic treats as
         # "infeasible at this a" rather than producing NaNs.
@@ -228,7 +239,8 @@ class WirelessFLProblem:
         # zero/NaN gain (deep fade to zero, corrupted channel): P^min = inf
         # is the infeasible-device gate; the unguarded num / pg emits NaN
         # at a = 0 (0 / 0) and poisons every downstream update
-        return jnp.where(pg > 0, num / jnp.where(pg > 0, pg, 1.0), jnp.inf)
+        return jnp.where(pgv > 0, num / jnp.where(pgv > 0, pgv, 1.0),
+                         jnp.inf)
 
     def objective(self, a: jax.Array) -> jax.Array:
         """Weighted sum of selection probabilities (7a) for one round."""

@@ -313,7 +313,7 @@ def _summarise(history: FLHistory, state: SchedulerState,
     }
 
 
-def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
+def run_closed_loop_grid(config: Optional[ClosedLoopConfig] = None,
                          strategies: Sequence[str] = CLOSED_LOOP_STRATEGIES,
                          service: Optional[FleetControlService] = None,
                          **sweep_kw) -> dict:
@@ -325,6 +325,7 @@ def run_closed_loop_grid(config: ClosedLoopConfig = ClosedLoopConfig(),
     Returns ``{"control": {...}, "strategies": {name: {...}}}`` — feed it
     to :func:`format_closed_loop_table` for the paper-style table.
     """
+    config = config if config is not None else ClosedLoopConfig()
     problem = make_problem(config.scenario, seed=config.seed,
                            n_devices=config.n_devices,
                            n_rounds=config.n_rounds,

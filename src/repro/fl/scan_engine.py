@@ -469,7 +469,8 @@ def _sweep_fn(static: _Static):
         ys_parts, accs = [], []
         start = 0
         for end in static.eval_rounds:         # static segment boundaries
-            seg = jax.tree_util.tree_map(lambda x: x[start:end + 1], xs)
+            seg = jax.tree_util.tree_map(
+                lambda x, s=start, e=end: x[s:e + 1], xs)
             carry, ys = jax.lax.scan(round_body, carry, seg)
             ys_parts.append(ys)
             logits = cnn.apply(carry[0], test_x[plan.dataset_id])

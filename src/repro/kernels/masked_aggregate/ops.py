@@ -83,7 +83,7 @@ def quantized_aggregate_pytree(gstack_tree, coef, key, bits,
     for leaf, k in zip(leaves, keys):
         ks = jax.random.split(k, leaf.shape[0])
         noise = jax.vmap(
-            lambda kk: jax.random.uniform(kk, leaf.shape[1:]))(ks)
+            lambda kk, shp=leaf.shape[1:]: jax.random.uniform(kk, shp))(ks)
         out.append(quantized_masked_aggregate(
             leaf, coef, noise, bits, interpret=interpret).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)

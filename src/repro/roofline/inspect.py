@@ -40,7 +40,7 @@ def analyse(hlo_text: str, top: int = 25):
             by_comp[comp][m.group(2)] += b
     colls.sort(reverse=True)
     print(f"top {top} collectives by output bytes:")
-    for b, kind, comp, line in colls[:top]:
+    for b, kind, comp, _line in colls[:top]:
         print(f"  {b / 2**20:10.1f} MiB {kind:20s} in {comp[:40]:40s}")
     print("\nbytes by computation (loop bodies execute trip_count times):")
     for comp, kinds in sorted(by_comp.items(),

@@ -569,8 +569,8 @@ def _resize_problem(problem: WirelessFLProblem,
 class FleetControlService:
     """The open-loop, continuously-batching, warm-starting control plane."""
 
-    def __init__(self, config: ServiceConfig = ServiceConfig()):
-        self.config = config
+    def __init__(self, config: Optional[ServiceConfig] = None):
+        self.config = config = config if config is not None else ServiceConfig()
         self.stats = ServiceStats(config.latency_window)
         # two arrival lanes; the priority lane preempts the normal one
         self._queue: collections.deque[SolveRequest] = collections.deque()

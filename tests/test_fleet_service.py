@@ -475,6 +475,27 @@ class TestWarmup:
         assert first.latency_s <= 3.0 * max(p50, 1e-3), \
             f"first={first.latency_s:.4f}s p50={p50:.4f}s"
 
+    @pytest.mark.slow
+    def test_zero_compiles_after_warmup(self):
+        """The recompile sentinel makes the warmup contract exact: after
+        ``warmup()``, two full rounds of live submit/step traffic (the
+        second exercising the warm-start signature) build ZERO new XLA
+        programs — not merely "no visible latency spike"."""
+        from repro.analysis import CompileBudget
+
+        svc = FleetControlService(ServiceConfig(max_batch=4, max_iters=43,
+                                                cost_smoothing=0.0))
+        svc.warmup(sample_problem(0, 24), max_devices=24)
+        rounds = [[sample_problem(1000 * r + c, 24) for c in range(3)]
+                  for r in range(2)]
+        with CompileBudget(budget=0, name="fleet post-warmup"):
+            now = 0.0
+            for round_problems in rounds:
+                for c, prob in enumerate(round_problems):
+                    now += 1e-4
+                    svc.submit(f"cell-{c}", prob, now=now)
+                svc.step(now=now)
+
     def test_unwarmed_first_request_eats_trace(self):
         """The contrast run: same stream shape, fresh jit signature, no
         warmup — the first request visibly pays the compile."""

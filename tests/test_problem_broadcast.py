@@ -279,3 +279,71 @@ def test_broadcast_sliced_equals_fullwidth_constraints(fading_problem):
     a2 = jnp.broadcast_to(a1[:, None], (N, K))
     p1 = jnp.asarray(P_1D)
     assert fading_problem.constraints_satisfied(a2, p1).shape == (N, K)
+
+
+# -------------------------------------------------------------------------
+# Defects surfaced by the rank-contract checker's first run
+# (repro.analysis.rank): pinned here so they cannot regress.
+# -------------------------------------------------------------------------
+
+class TestRankCheckerRegressions:
+    """The analysis sweep found two silent contract violations:
+
+    * a rank-1 (round-invariant) ``fading`` draw built an [N, N]
+      ``path_gain`` — the ``base[:, None]`` lift ran unconditionally and
+      broadcast silently whenever K == N;
+    * a rank-2 ``bits`` table raised (or mis-shaped) in ``tx_time`` /
+      ``p_min`` when the decision variables stayed rank 1, although the
+      contract says the result lifts to the highest rank present.
+    """
+
+    def test_rank1_fading_keeps_rank1_path_gain(self, fading_problem):
+        pb = dataclasses.replace(fading_problem,
+                                 fading=fading_problem.fading[:, 0])
+        pg = pb.path_gain()
+        assert pg.shape == (N,)
+        # and bitwise equals column 0 of the full-width problem
+        np.testing.assert_array_equal(
+            np.asarray(pg), np.asarray(fading_problem.path_gain()[:, 0]))
+
+    def test_rank1_fading_with_interference(self, fading_problem):
+        i2 = jnp.broadcast_to(
+            jnp.asarray(np.linspace(1e-13, 5e-13, N), jnp.float32)[:, None],
+            (N, K))
+        pb1 = dataclasses.replace(fading_problem,
+                                  fading=fading_problem.fading[:, 0],
+                                  interference=i2[:, 0])
+        assert pb1.path_gain().shape == (N,)
+        pb2 = dataclasses.replace(fading_problem,
+                                  fading=fading_problem.fading[:, 0],
+                                  interference=i2)
+        assert pb2.path_gain().shape == (N, K)
+
+    @pytest.fixture()
+    def bits2_problem(self, fading_problem):
+        bits = jnp.asarray(
+            8.0 * (1.0 + np.arange(N * K, dtype=np.float32).reshape(N, K)
+                   % 3))
+        return dataclasses.replace(fading_problem, bits=bits)
+
+    @pytest.mark.parametrize("method,arg", [
+        ("tx_time", P_1D), ("upload_energy", P_1D),
+        ("round_energy", P_1D), ("p_min", A_1D),
+    ])
+    def test_bits2_lifts_rank1_args(self, bits2_problem, method, arg):
+        """Rank-2 bits + rank-1 decision variable: result is [N, K] and
+        every column matches the rank-1 eval on the column-sliced bits."""
+        out = getattr(bits2_problem, method)(jnp.asarray(arg))
+        assert out.shape == (N, K)
+        for col in range(K):
+            sliced = dataclasses.replace(
+                bits2_problem, bits=bits2_problem.bits[:, col],
+                fading=bits2_problem.fading[:, col])
+            ref = getattr(sliced, method)(jnp.asarray(arg))
+            np.testing.assert_array_equal(np.asarray(ref),
+                                          np.asarray(out[:, col]))
+
+    def test_bits2_constraints_mixed_ranks(self, bits2_problem):
+        out = bits2_problem.constraints_satisfied(jnp.asarray(A_1D),
+                                                  jnp.asarray(P_1D))
+        assert out.shape == (N, K)

@@ -1,0 +1,242 @@
+"""Seed-era roofline modules (``repro.roofline``): smoke + golden tests.
+
+These modules predate the test suite (they shipped with the v0 seed and
+were only exercised manually via ``repro.roofline.report``); this file
+pins their arithmetic so estimator refactors cannot silently change the
+EXPERIMENTS.md tables:
+
+* ``analysis.py`` — ``model_flops`` closed forms per mode, the
+  ``Roofline.finalize`` term/dominance algebra, ``build_roofline``
+  wiring (cost-dict key fallback, per-chip normalisation);
+* ``hlo.py`` — ``shape_bytes`` on dtype/tuple strings, the collective
+  inventory on a synthetic optimized-HLO text (incl. async start/done
+  dedup);
+* ``report.py`` — table rendering and hillclimb picks on synthetic
+  artifact records.
+"""
+import math
+
+import pytest
+
+from repro.configs import ARCHS, get_arch, get_shape
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.roofline.analysis import (Roofline, analytic_flops,
+                                     build_roofline, estimate_hbm_bytes,
+                                     model_flops)
+from repro.roofline.hlo import parse_collectives, shape_bytes
+from repro.roofline.report import (_fmt_bytes, dryrun_table,
+                                   interesting_pairs, roofline_table)
+
+
+# ------------------------------------------------------------- analysis
+
+class TestModelFlops:
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    def test_train_is_6nd(self, arch):
+        cfg, shape = get_arch(arch), get_shape("train_4k")
+        expect = 6.0 * cfg.n_active_params() * (shape.global_batch
+                                                * shape.seq_len)
+        assert model_flops(cfg, shape) == expect
+
+    def test_prefill_forward_only(self):
+        cfg = get_arch("gemma3-1b")
+        train = model_flops(cfg, get_shape("train_4k"))
+        prefill = model_flops(cfg, get_shape("prefill_32k"))
+        # same 2ND forward term, train adds the 4ND backward; the shapes
+        # share batch*seq? no — compare against the closed form directly
+        shape = get_shape("prefill_32k")
+        assert prefill == 2.0 * cfg.n_active_params() * (
+            shape.global_batch * shape.seq_len)
+        assert train > 0
+
+    def test_decode_one_token_per_sequence(self):
+        cfg = get_arch("gemma3-1b")
+        shape = get_shape("decode_32k")
+        assert model_flops(cfg, shape) == (2.0 * cfg.n_active_params()
+                                           * shape.global_batch)
+
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    def test_analytic_flops_adds_attention(self, arch):
+        cfg, shape = get_arch(arch), get_shape("train_4k")
+        base, full = model_flops(cfg, shape), analytic_flops(cfg, shape)
+        if cfg.attn is None:
+            assert full == base
+        else:
+            assert full > base
+
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    @pytest.mark.parametrize("shape", ["train_4k", "prefill_32k",
+                                       "decode_32k"])
+    def test_hbm_estimate_positive_and_finite(self, arch, shape):
+        est = estimate_hbm_bytes(get_arch(arch), get_shape(shape), chips=8)
+        assert math.isfinite(est) and est > 0
+
+
+class TestRooflineFinalize:
+    def _roof(self, **kw):
+        base = dict(arch="a", shape="s", mesh="single", chips=4,
+                    flops_per_device=0.0, bytes_per_device=0.0,
+                    collective_bytes_per_device=0.0, model_flops=0.0)
+        base.update(kw)
+        return Roofline(**base).finalize()
+
+    def test_terms_are_rate_quotients(self):
+        r = self._roof(flops_per_device=PEAK_FLOPS_BF16 * 2.0,
+                       bytes_per_device=HBM_BW * 0.5,
+                       collective_bytes_per_device=ICI_BW_PER_LINK * 0.25)
+        assert r.compute_s == pytest.approx(2.0)
+        assert r.memory_s == pytest.approx(0.5)
+        assert r.collective_s == pytest.approx(0.25)
+        assert r.dominant == "compute"
+
+    @pytest.mark.parametrize("term,expect", [
+        ("flops_per_device", "compute"),
+        ("bytes_per_device", "memory"),
+        ("collective_bytes_per_device", "collective")])
+    def test_dominant_picks_largest(self, term, expect):
+        scale = {"flops_per_device": PEAK_FLOPS_BF16,
+                 "bytes_per_device": HBM_BW,
+                 "collective_bytes_per_device": ICI_BW_PER_LINK}
+        kw = {k: v * 1e-3 for k, v in scale.items()}
+        kw[term] = scale[term] * 1.0
+        assert self._roof(**kw).dominant == expect
+
+    def test_useful_ratio(self):
+        r = self._roof(flops_per_device=10.0, model_flops=20.0, chips=4)
+        assert r.useful_ratio == pytest.approx(20.0 / 40.0)
+        assert self._roof(flops_per_device=0.0).useful_ratio == 0.0
+
+    def test_build_roofline_cost_key_fallback(self):
+        for key in ("bytes accessed", "bytes_accessed"):
+            r = build_roofline("a", "s", "single", 4,
+                               {"flops": 8.0, key: 16.0},
+                               collective_bytes_total=32.0, mflops=1.0)
+            assert r.flops_per_device == 8.0
+            assert r.bytes_per_device == 16.0
+            assert r.collective_bytes_per_device == 8.0  # / chips
+
+    def test_build_roofline_with_arch_fills_analytics(self):
+        cfg, shape = get_arch("gemma3-1b"), get_shape("train_4k")
+        r = build_roofline("gemma3-1b", "train_4k", "single", 8,
+                           {"flops": 1.0}, 0.0,
+                           model_flops(cfg, shape), cfg=cfg, shape=shape)
+        assert r.analytic_flops_total == analytic_flops(cfg, shape)
+        assert r.hbm_est_bytes_per_device == estimate_hbm_bytes(
+            cfg, shape, 8)
+        assert r.dominant_est in ("compute", "memory", "collective")
+        assert "dominant" in r.summary()
+
+
+# ------------------------------------------------------------------ hlo
+
+class TestShapeBytes:
+    @pytest.mark.parametrize("s,expect", [
+        ("f32[8]", 32),
+        ("bf16[16,4096]", 16 * 4096 * 2),
+        ("pred[]", 1),
+        ("u8[3,3]", 9),
+        ("(f32[4], bf16[2,2])", 16 + 8),       # tuple shapes sum
+        ("token[]", 0),                        # unknown dtype skipped
+    ])
+    def test_golden(self, s, expect):
+        assert shape_bytes(s) == expect
+
+
+_HLO = """\
+HloModule m
+ENTRY %main {
+  %ag = bf16[16,4096]{1,0} all-gather(%p0), replica_groups={{0,1}}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[256]{0} reduce-scatter(%y), dimensions={0}
+  %start = bf16[8,8]{1,0} all-gather-start(%z)
+  %done = bf16[8,8]{1,0} all-gather-done(%start)
+  %cp = f32[64]{0} collective-permute(%w), source_target_pairs={{0,1}}
+}
+"""
+
+
+class TestParseCollectives:
+    def test_inventory_golden(self):
+        stats = parse_collectives(_HLO)
+        assert stats.count_by_kind == {"all-gather": 2, "all-reduce": 1,
+                                       "reduce-scatter": 1,
+                                       "collective-permute": 1}
+        ag = 16 * 4096 * 2 + 8 * 8 * 2      # start counted, done deduped
+        assert stats.bytes_by_kind["all-gather"] == ag
+        assert stats.bytes_by_kind["all-reduce"] == 1024 * 4
+        assert stats.bytes_by_kind["reduce-scatter"] == 256 * 4
+        assert stats.bytes_by_kind["collective-permute"] == 64 * 4
+        assert stats.total_bytes == sum(stats.bytes_by_kind.values())
+        assert stats.as_dict()["total_bytes"] == stats.total_bytes
+
+    def test_no_collectives(self):
+        stats = parse_collectives("ENTRY %m { %r = f32[2] add(%a, %b) }")
+        assert stats.total_bytes == 0
+        assert stats.bytes_by_kind == {}
+
+
+# --------------------------------------------------------------- report
+
+def _rec(arch, shape, *, mesh="single", compute=2.0, hbm=1.0, coll=0.5):
+    """A synthetic ok-record shaped like a dry-run artifact after
+    ``report._refresh`` (roofline fields in seconds)."""
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "chips": 4,
+        "status": "ok", "n_params": 1.5e9, "compile_s": 1.2,
+        "memory_analysis": {"temp_size_in_bytes": 2 ** 30,
+                            "argument_size_in_bytes": 2 ** 29},
+        "collectives": {"bytes_by_kind": {"all-reduce": 4096},
+                        "count_by_kind": {"all-reduce": 2},
+                        "total_bytes": 4096},
+        "roofline": {"compute_s": compute, "memory_s": hbm,
+                     "collective_s": coll, "dominant": "compute",
+                     "compute_analytic_s": compute, "hbm_est_s": hbm,
+                     "dominant_est": "compute",
+                     "model_flops": 1e15, "useful_ratio": 0.5},
+    }
+
+
+class TestReport:
+    def test_fmt_bytes(self):
+        assert _fmt_bytes(512) == "512.0B"
+        assert _fmt_bytes(2048) == "2.0KiB"
+        assert _fmt_bytes(3 * 2 ** 30) == "3.0GiB"
+
+    def test_dryrun_table_rows(self):
+        recs = [_rec("a1", "train_4k"),
+                {"arch": "a2", "shape": "train_4k", "mesh": "single",
+                 "status": "skipped", "reason": "x" * 60},
+                {"arch": "a3", "shape": "train_4k", "mesh": "single",
+                 "status": "error"}]
+        table = dryrun_table(recs)
+        lines = table.splitlines()
+        assert len(lines) == 2 + 3                  # header + 3 rows
+        assert "| a1 |" in table and "1.50B" in table
+        assert "SKIP" in table and "ERROR" in table
+        assert "all-reduce:4.0KiB" in table
+
+    def test_roofline_table_filters_mesh_and_status(self):
+        recs = [_rec("a1", "train_4k"),
+                _rec("a2", "train_4k", mesh="multi"),
+                {"arch": "a3", "shape": "train_4k", "mesh": "single",
+                 "status": "error"}]
+        single = roofline_table(recs, "single")
+        assert "a1" in single and "a2" not in single and "a3" not in single
+        assert "a2" in roofline_table(recs, "multi")
+        assert "**compute**" in single
+
+    def test_interesting_pairs_picks(self):
+        recs = [
+            # headroom case: tiny compute fraction
+            _rec("lowfrac", "train_4k", compute=0.1, hbm=8.0, coll=0.1),
+            # collective-bound case
+            _rec("collbound", "prefill_32k", compute=1.0, hbm=1.0,
+                 coll=50.0),
+            _rec("balanced", "train_4k", compute=1.0, hbm=1.0, coll=0.1),
+            # wrong shape/mesh records must be ignored
+            _rec("othershape", "decode_32k", compute=1e-9),
+            _rec("othermesh", "train_4k", mesh="multi", compute=1e-9),
+        ]
+        picks = interesting_pairs(recs)
+        assert picks["worst_roofline_fraction"][0] == "lowfrac"
+        assert picks["most_collective"] == ("collbound", "prefill_32k")

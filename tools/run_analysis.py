@@ -1,0 +1,132 @@
+"""Static-analysis driver (CI ``analysis`` job).
+
+Runs the four jaxpr-level passes and emits one JSON report:
+
+* **recompile** — measure every registered hot path
+  (``repro.analysis.hotpaths``) and compare steady-state compile counts
+  against the committed ``analysis/budgets.json``;
+* **prng** — every registered production program must show zero
+  key-reuse findings;
+* **rank** — the exhaustive [N]/[N,K] broadcast sweep over
+  ``WirelessFLProblem`` must be clean;
+* **hygiene** — host-sync / donation / weak-type audits must be clean.
+
+Usage::
+
+    PYTHONPATH=src python tools/run_analysis.py            # report only
+    PYTHONPATH=src python tools/run_analysis.py --gate     # exit 1 on red
+    PYTHONPATH=src python tools/run_analysis.py --json out.json
+
+``--only recompile,prng`` restricts the run (handy while iterating on a
+single pass).  The report is written to ``--json`` (default
+``analysis/report.json``, uploaded as a CI artifact) and summarised on
+stdout either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+PASSES = ("recompile", "prng", "rank", "hygiene")
+
+
+def run_recompile() -> dict:
+    from repro.analysis.hotpaths import load_budgets, measure_all
+
+    measured = measure_all()
+    budgets = load_budgets()
+    failures = []
+    for name, budget in sorted(budgets.items()):
+        if name not in measured:
+            failures.append(f"budgeted hot path {name!r} is not registered")
+            continue
+        got = measured[name]["steady_compiles"]
+        if got > budget:
+            failures.append(
+                f"{name}: {got} steady-state compile(s), budget {budget}; "
+                f"programs: {measured[name]['steady_programs']}")
+    for name in sorted(set(measured) - set(budgets)):
+        failures.append(f"hot path {name!r} has no entry in "
+                        "analysis/budgets.json")
+    return {"ok": not failures, "failures": failures, "measured": measured,
+            "budgets": budgets}
+
+
+def run_prng() -> dict:
+    from repro.analysis.prng import PRNG_PROGRAMS
+
+    findings = {}
+    for name, prog in sorted(PRNG_PROGRAMS.items()):
+        findings[name] = [str(f) for f in prog()]
+    failures = [f"{name}: {fs}" for name, fs in findings.items() if fs]
+    return {"ok": not failures, "failures": failures, "findings": findings}
+
+
+def run_rank() -> dict:
+    from repro.analysis.rank import sweep_rank_contract
+
+    findings, stats = sweep_rank_contract()
+    return {"ok": not findings, "failures": [str(f) for f in findings],
+            "stats": stats}
+
+
+def run_hygiene() -> dict:
+    from repro.analysis.hygiene import run_hygiene as _run
+
+    report = _run()
+    return {"ok": report["n_findings"] == 0,
+            "failures": report["findings"], "stats": {
+                k: report[k] for k in ("host_sync", "donation", "weak_type")}}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 when any pass is red")
+    ap.add_argument("--json", type=Path,
+                    default=REPO / "analysis" / "report.json",
+                    help="report path (default analysis/report.json)")
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {','.join(PASSES)}")
+    args = ap.parse_args(argv)
+
+    selected = PASSES if args.only is None else tuple(
+        p.strip() for p in args.only.split(","))
+    unknown = set(selected) - set(PASSES)
+    if unknown:
+        ap.error(f"unknown pass(es): {sorted(unknown)}")
+
+    runners = {"recompile": run_recompile, "prng": run_prng,
+               "rank": run_rank, "hygiene": run_hygiene}
+    report: dict = {"passes": {}}
+    red = []
+    for name in selected:
+        print(f"== {name} ==", flush=True)
+        result = runners[name]()
+        report["passes"][name] = result
+        status = "ok" if result["ok"] else "RED"
+        print(f"   {status}" + (
+            "" if result["ok"] else
+            "".join(f"\n   - {f}" for f in result["failures"])), flush=True)
+        if not result["ok"]:
+            red.append(name)
+    report["ok"] = not red
+
+    args.json.parent.mkdir(parents=True, exist_ok=True)
+    args.json.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    print(f"report -> {args.json}")
+
+    if red:
+        print(f"analysis gate RED: {', '.join(red)}")
+        return 1 if args.gate else 0
+    print("analysis gate green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
